@@ -1,0 +1,67 @@
+"""Paper Fig. 6: end-to-end detection throughput vs batch size, QRMark
+pipeline vs the sequential Stable-Signature-style baseline.
+
+This container has one CPU device, so absolute numbers are CPU-bound;
+the claim being reproduced is the RELATIVE speedup curve (the paper's
+2.43x average comes from tiling + fused preprocess + async RS + lane
+scheduling, all active here)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.detect import DetectionConfig, DetectionPipeline
+from repro.data.pipeline import synth_image
+
+BATCHES = (8, 16, 32, 64, 128)
+IMG = 128
+RAW = 160
+TILE = 32
+
+
+def _pipe(mode, rs_mode, params, cfg_train, interleave=True, fused=True,
+          tile=TILE):
+    cfg = DetectionConfig(tile=tile, img_size=IMG, resize_src=RAW - 16,
+                          mode=mode, rs_mode=rs_mode, rs_threads=8,
+                          interleave=interleave, fused_preprocess=fused,
+                          code=cfg_train.code)
+    return DetectionPipeline(cfg, params["dec"])
+
+
+def run_stream(pipe, batch, n_batches):
+    data = [np.stack([synth_image(k * batch + i, RAW)
+                      for i in range(batch)]) for k in range(n_batches)]
+    r = pipe.run_stream(data)
+    return r["throughput_ips"]
+
+
+def main(quick: bool = False):
+    loaded = common.load_extractor(TILE) or common.load_extractor(16)
+    if loaded is None:
+        print("fig6: no trained extractor available", flush=True)
+        return []
+    params, tcfg = loaded
+    tile = tcfg.tile
+    n_batches = 2 if quick else 4
+    batches = BATCHES[:3] if quick else BATCHES
+    rows = []
+    for b in batches:
+        base = _pipe("sequential", "cpu_sync", params, tcfg,
+                     interleave=False, fused=False, tile=tile)
+        t_base = run_stream(base, b, n_batches)
+        qr = _pipe("qrmark", "device", params, tcfg, tile=tile)
+        t_qr = run_stream(qr, b, n_batches)
+        qr.close(); base.close()
+        row = {"batch": b, "baseline_ips": round(t_base, 1),
+               "qrmark_ips": round(t_qr, 1),
+               "speedup": round(t_qr / t_base, 2) if t_base else None}
+        rows.append(row)
+        common.emit(f"fig6/batch{b}", 1.0 / max(t_qr, 1e-9),
+                    f"qrmark={t_qr:.1f}ips;base={t_base:.1f}ips;"
+                    f"speedup={row['speedup']}")
+    common.save_json("fig6_throughput", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

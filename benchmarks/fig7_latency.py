@@ -1,0 +1,52 @@
+"""Paper Fig. 7: per-batch end-to-end latency vs batch size (QRMark's
+latency grows much slower than the sequential baseline's)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.fig6_throughput import IMG, RAW, TILE, _pipe
+from repro.data.pipeline import synth_image
+
+BATCHES = (8, 16, 32, 64, 128)
+
+
+def batch_latency(pipe, batch, iters=3):
+    raw = np.stack([synth_image(i, RAW) for i in range(batch)])
+    pipe.detect_batch(raw)  # warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        pipe.detect_batch(raw)
+    return (time.perf_counter() - t0) / iters
+
+
+def main(quick: bool = False):
+    loaded = common.load_extractor(TILE) or common.load_extractor(16)
+    if loaded is None:
+        print("fig7: no trained extractor available", flush=True)
+        return []
+    params, tcfg = loaded
+    batches = BATCHES[:3] if quick else BATCHES
+    rows = []
+    for b in batches:
+        base = _pipe("sequential", "cpu_sync", params, tcfg,
+                     interleave=False, fused=False, tile=tcfg.tile)
+        l_base = batch_latency(base, b, iters=2 if quick else 3)
+        qr = _pipe("qrmark", "device", params, tcfg, tile=tcfg.tile)
+        l_qr = batch_latency(qr, b, iters=2 if quick else 3)
+        base.close(); qr.close()
+        row = {"batch": b, "baseline_ms": round(l_base * 1e3, 1),
+               "qrmark_ms": round(l_qr * 1e3, 1),
+               "ratio": round(l_base / l_qr, 2) if l_qr else None}
+        rows.append(row)
+        common.emit(f"fig7/batch{b}", l_qr,
+                    f"qrmark={row['qrmark_ms']}ms;"
+                    f"base={row['baseline_ms']}ms;ratio={row['ratio']}")
+    common.save_json("fig7_latency", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

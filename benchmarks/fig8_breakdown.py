@@ -1,0 +1,59 @@
+"""Paper Fig. 8: optimization breakdown — cumulative speedup from each
+QRMark component over the sequential baseline:
+
+  baseline -> +LB (large batch) -> +T+F (tiling + kernel fusion) ->
+  +CPU (RS thread pool + codebook) -> +Allocation (adaptive lanes,
+  interleaving, on-device RS).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.fig6_throughput import IMG, RAW, _pipe, run_stream
+
+
+def main(quick: bool = False):
+    tiles = common.trained_tiles()
+    if not tiles:
+        print("fig8: no trained extractor available", flush=True)
+        return []
+    params, tcfg = common.load_extractor(32 if 32 in tiles else tiles[0])
+    tile = tcfg.tile
+    nb = 2 if quick else 4
+    b_small, b_large = (16, 64) if quick else (16, 128)
+
+    stages = []
+    # 1. sequential baseline at small batch
+    p = _pipe("sequential", "cpu_sync", params, tcfg, interleave=False,
+              fused=False, tile=tile)
+    base = run_stream(p, b_small, nb); p.close()
+    stages.append(("baseline", base))
+    # 2. +LB: same pipeline, large batch
+    p = _pipe("sequential", "cpu_sync", params, tcfg, interleave=False,
+              fused=False, tile=tile)
+    stages.append(("+LB", run_stream(p, b_large, nb))); p.close()
+    # 3. +T+F: tiling + fused preprocess kernel
+    p = _pipe("tiled", "cpu_sync", params, tcfg, interleave=False,
+              fused=True, tile=tile)
+    stages.append(("+T+F", run_stream(p, b_large, nb))); p.close()
+    # 4. +CPU: RS correction thread pool + codebook
+    p = _pipe("tiled", "cpu_pool", params, tcfg, interleave=False,
+              fused=True, tile=tile)
+    stages.append(("+CPU", run_stream(p, b_large, nb))); p.close()
+    # 5. +Allocation: full qrmark (lanes, interleave, on-device RS)
+    p = _pipe("qrmark", "device", params, tcfg, tile=tile)
+    stages.append(("+Allocation", run_stream(p, b_large, nb))); p.close()
+
+    rows = []
+    for name, ips in stages:
+        rows.append({"config": name, "ips": round(ips, 1),
+                     "speedup": round(ips / base, 2)})
+        common.emit(f"fig8/{name}", 1.0 / max(ips, 1e-9),
+                    f"ips={ips:.1f};speedup={ips / base:.2f}x")
+    common.save_json("fig8_breakdown", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

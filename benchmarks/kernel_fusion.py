@@ -1,0 +1,60 @@
+"""Paper Appendix B.1: kernel fusion for preprocessing.
+
+On this CPU container the meaningful comparison is structural, the same
+method as the dry-run: lower both versions and compare HLO op counts and
+bytes accessed (the fusion removes intermediate HBM round-trips); wall
+time in interpret mode is reported as an anecdote only."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core.transforms import preprocess_reference
+from repro.kernels.ops import fused_preprocess
+
+
+def hlo_stats(fn, *args):
+    lowered = jax.jit(fn).lower(*args)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    n_ops = sum(1 for l in txt.splitlines()
+                if " = " in l and "parameter(" not in l)
+    return {"ops": n_ops,
+            "bytes": float(cost.get("bytes accessed", 0)),
+            "flops": float(cost.get("flops", 0))}
+
+
+def main(quick: bool = False):
+    b = 4 if quick else 16
+    raw = jax.ShapeDtypeStruct((b, 320, 320, 3), jnp.uint8)
+    unfused = hlo_stats(lambda r: preprocess_reference(r, resize=288,
+                                                       crop=256), raw)
+    fused = hlo_stats(lambda r: fused_preprocess(r, resize=288, crop=256),
+                      raw)
+    rows = [{"variant": "unfused", **unfused},
+            {"variant": "fused_pallas", **fused},
+            {"variant": "reduction",
+             "ops": round(unfused["ops"] / max(fused["ops"], 1), 2),
+             "bytes": round(unfused["bytes"] / max(fused["bytes"], 1), 2),
+             "flops": round(unfused["flops"] / max(fused["flops"], 1), 2)}]
+    # wall-clock anecdote (CPU interpret mode)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 256, (b, 320, 320, 3), dtype=np.uint8))
+    t_un = common.timeit(
+        jax.jit(lambda r: preprocess_reference(r, resize=288, crop=256)), x)
+    t_fu = common.timeit(
+        lambda r: fused_preprocess(r, resize=288, crop=256), x)
+    common.emit("kernel_fusion/unfused", t_un,
+                f"ops={unfused['ops']};bytes={unfused['bytes']:.0f}")
+    common.emit("kernel_fusion/fused", t_fu,
+                f"ops={fused['ops']};bytes={fused['bytes']:.0f};"
+                f"bytes_reduction={rows[2]['bytes']}x")
+    common.save_json("kernel_fusion", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

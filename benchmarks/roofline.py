@@ -1,0 +1,64 @@
+"""Roofline table: reads the dry-run JSON records (experiments/dryrun/)
+and prints per-(arch x shape x mesh) compute/memory/collective terms,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS ratio — the §Roofline
+deliverable."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks import common
+
+
+def load_records(mesh: str = "single", tag: str = "baseline"):
+    recs = []
+    for p in sorted(common.DRYRUN_DIR.glob(f"*__{mesh}__{tag}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def fmt_row(r):
+    if r.get("status") == "skipped":
+        return (f"{r['arch']:26s} {r['shape']:12s} SKIP: "
+                f"{r.get('reason', '')[:48]}")
+    if r.get("status") != "ok":
+        return (f"{r['arch']:26s} {r['shape']:12s} FAILED: "
+                f"{r.get('error', '')[:60]}")
+    d = r["derived"]
+    return (f"{r['arch']:26s} {r['shape']:12s} "
+            f"tc={d['t_compute_s']:9.4f}s tm={d['t_memory_s']:9.4f}s "
+            f"tx={d['t_collective_s']:9.4f}s dom={d['dominant']:10s} "
+            f"useful={d['useful_flops_ratio']:6.3f} "
+            f"roofline_frac={d['roofline_fraction']:5.3f}")
+
+
+def main(quick: bool = False, mesh: str = "single", tag: str = "baseline"):
+    recs = load_records(mesh, tag)
+    if not recs:
+        print(f"roofline: no dry-run records for mesh={mesh} tag={tag}; "
+              "run repro.launch.dryrun first", flush=True)
+        return []
+    print(f"--- roofline ({mesh}-pod mesh, tag={tag}) ---", flush=True)
+    rows = []
+    for r in recs:
+        print(fmt_row(r), flush=True)
+        if r.get("status") == "ok":
+            d = r["derived"]
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], **{k: d[k] for k in (
+                             "t_compute_s", "t_memory_s", "t_collective_s",
+                             "dominant", "useful_flops_ratio",
+                             "roofline_fraction", "model_flops")}})
+            common.emit(
+                f"roofline/{r['arch']}/{r['shape']}/{mesh}",
+                d["roofline_bound_s"],
+                f"dom={d['dominant']};frac={d['roofline_fraction']:.3f};"
+                f"useful={d['useful_flops_ratio']:.3f}")
+    common.save_json(f"roofline_{mesh}_{tag}", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    main(mesh=mesh)

@@ -1,0 +1,40 @@
+"""Paper Table 3: bit accuracy of the three tiling strategies under
+attacks (none / crop 0.1 / crop 0.5 / resize 0.5 / blur / brightness 2 /
+contrast 2)."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core.tiling import STRATEGIES
+from repro.core.train_extractor import evaluate
+
+ATTACKS = ("none", "crop_0.1", "crop_0.5", "resize_0.5", "blur",
+           "brightness_2", "contrast_2")
+
+
+def main(quick: bool = False, tile: int = 32):
+    loaded = common.load_extractor(tile)
+    if loaded is None:
+        tiles = common.trained_tiles()
+        if not tiles:
+            print("table3: no trained extractor; run "
+                  "examples/train_extractor.py first", flush=True)
+            return []
+        tile = tiles[0]
+        loaded = common.load_extractor(tile)
+    params, cfg = loaded
+    n_img = 32 if quick else 96
+    rows = []
+    for strat in STRATEGIES:
+        ev = evaluate(params, cfg, n_images=n_img, attacks=ATTACKS,
+                      strategy=strat)
+        row = {"strategy": strat}
+        row.update({a: round(ev[a]["bit_acc"], 3) for a in ATTACKS})
+        rows.append(row)
+        common.emit(f"table3/{strat}", 0.0,
+                    ";".join(f"{a}={row[a]}" for a in ATTACKS))
+    common.save_json("table3_strategies", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Paper Table 4: validation accuracy of each tiling strategy across tile
+sizes (the Random-Grid-wins ablation)."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core.tiling import STRATEGIES
+from repro.core.train_extractor import evaluate
+
+
+def main(quick: bool = False):
+    n_img = 32 if quick else 96
+    rows = {s: {"strategy": s} for s in STRATEGIES}
+    for tile in common.trained_tiles():
+        params, cfg = common.load_extractor(tile)
+        for strat in STRATEGIES:
+            ev = evaluate(params, cfg, n_images=n_img, attacks=("none",),
+                          strategy=strat)
+            rows[strat][f"tile{tile}"] = round(ev["none"]["bit_acc"], 3)
+    out = list(rows.values())
+    for r in out:
+        common.emit(f"table4/{r['strategy']}", 0.0,
+                    ";".join(f"{k}={v}" for k, v in r.items()
+                             if k != "strategy"))
+    common.save_json("table4_tile_sizes", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Paper Table 5: bit- and word-level accuracy vs payload length (40..96
+bits) at tile 64 — the word-accuracy collapse past 48 bits.
+
+Channel quality (per-bit error rate) is taken from the measured BER of
+the trained extractors as a function of embedding density
+(bits-per-pixel), then the REAL RS codec (encode -> binomial bit flips ->
+Berlekamp-Welch decode) is run per payload length.  This reproduces the
+collapse mechanism — redundancy t = (n-k)/2 shrinking while the error
+rate grows — with the actual decoder rather than an analytic formula.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.rs.codec import RSCode, rs_decode, rs_encode
+
+BITS = (40, 48, 56, 64, 72, 80, 96)
+TILE = 64
+
+
+def code_for(bits: int) -> RSCode:
+    """GF(16) systematic code with the paper's default 3 parity symbols
+    (t=1) while the length bound allows; longer payloads switch to a
+    short GF(256) code with the same t=1 redundancy (paper App. A:
+    'k is selected dynamically' for larger payloads)."""
+    k = -(-bits // 4)
+    if k + 3 <= 15:
+        return RSCode(m=4, n=k + 3, k=k)
+    k8 = -(-bits // 8)
+    return RSCode(m=8, n=k8 + 2, k=k8)
+
+
+def _ber_at_density(density: float, pts) -> float:
+    """Interpolate measured (density, ber) points; clamp at the ends."""
+    if not pts:
+        # fallback: calibrated logistic in density (documented)
+        return float(1 / (1 + np.exp(-(density * 40 - 3.2))) * 0.45)
+    xs = np.array([p[0] for p in pts])
+    ys = np.array([max(p[1], 1e-4) for p in pts])
+    return float(np.interp(density, xs, ys))
+
+
+# the paper's own Table-5 bit-accuracy row (their extractor's channel
+# quality per payload length at tile 64) — used to validate that the
+# word-accuracy collapse emerges from OUR RS decoder given their channel
+PAPER_BITACC = {40: 0.99, 48: 0.99, 56: 0.98, 64: 0.91, 72: 0.89,
+                80: 0.84, 96: 0.77}
+
+
+def _mc(code, ber, trials, rng):
+    bit_ok = word_ok = 0
+    for _ in range(trials):
+        msg = rng.integers(0, 2, code.message_bits)
+        cw = rs_encode(code, msg)
+        flips = rng.random(code.codeword_bits) < ber
+        res = rs_decode(code, cw ^ flips)
+        bit_ok += (res.message_bits == msg).mean()
+        word_ok += res.ok and np.array_equal(res.message_bits, msg)
+    return bit_ok / trials, word_ok / trials
+
+
+def main(quick: bool = False):
+    pts = common.ber_model()
+    trials = 100 if quick else 400
+    rng = np.random.default_rng(0)
+    rows = []
+    for bits in BITS:
+        code = code_for(bits)
+        density = code.codeword_bits / (TILE * TILE)
+        ber = _ber_at_density(density, pts)
+        bit_acc, word_acc = _mc(code, ber, trials, rng)
+        # same codec on the PAPER's per-length channel quality
+        p_bit, p_word = _mc(code, 1.0 - PAPER_BITACC[bits], trials, rng)
+        row = {"bits": bits, "code": f"({code.n},{code.k})xGF(2^{code.m})",
+               "ours_ber": round(ber, 4),
+               "ours_bit_acc": round(bit_acc, 3),
+               "ours_word_acc": round(word_acc, 3),
+               "paper_channel_bit_acc": round(p_bit, 3),
+               "paper_channel_word_acc": round(p_word, 3)}
+        rows.append(row)
+        common.emit(f"table5/bits{bits}", 0.0,
+                    f"ours_word={row['ours_word_acc']}(ber={ber:.3f});"
+                    f"paper_channel_word={row['paper_channel_word_acc']}"
+                    f"(ber={1 - PAPER_BITACC[bits]:.2f})")
+    common.save_json("table5_bitlengths", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

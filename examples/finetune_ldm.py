@@ -1,0 +1,75 @@
+"""Example: QRMark §4.2 — fine-tune the (stand-in) LDM decoder D_m so
+every generated image carries the RS-encoded signature m_s, recoverable
+by the frozen tile extractor H_D from a single random-grid tile.
+
+  PYTHONPATH=src python examples/finetune_ldm.py [--steps 120]
+"""
+import argparse
+import pickle
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ldm, tiling
+from repro.core.extractor import extractor_forward
+from repro.core.rs import jax_rs
+from repro.data.pipeline import synth_image
+
+EXTRACTOR = Path("experiments/extractor/tile16_params.pkl")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--img", type=int, default=64)
+    args = ap.parse_args()
+
+    # frozen extractor H_D from the offline stage
+    if EXTRACTOR.exists():
+        with open(EXTRACTOR, "rb") as f:
+            d = pickle.load(f)
+        hd, code, tile = d["params"]["dec"], d["cfg"].code, d["cfg"].tile
+        print(f"loaded extractor (tile {tile})")
+    else:
+        raise SystemExit("run examples/train_extractor.py --tile 16 first")
+
+    print("[1/3] pretraining the autoencoder (stand-in LDM VAE)...")
+    ae = ldm.pretrain_autoencoder(jax.random.key(0), img_size=args.img,
+                                  steps=120, batch=8, verbose=True)
+
+    print("[2/3] fine-tuning D_m against the frozen extractor...")
+    res = ldm.finetune_decoder(ae, hd, code=code, tile=tile,
+                               img_size=args.img, steps=args.steps,
+                               batch=4, lr=5e-3, lam_i=0.1, verbose=True)
+
+    print("[3/3] verifying: generate -> tile -> extract -> RS decode")
+    imgs = np.stack([synth_image(9_000_000 + i, args.img)
+                     for i in range(16)])
+    x = jnp.asarray(imgs, jnp.float32) / 127.5 - 1.0
+    z = ldm.encode(ae, x)
+    xw = ldm.decode(res.decoder, z)  # watermarked reconstructions
+    sel, _ = tiling.select_tiles("random_grid", jax.random.key(7), xw,
+                                 tile)
+    logits = extractor_forward(hd, sel)
+    bits = (logits > 0).astype(jnp.int32)
+    out = jax_rs.make_batch_decoder(code)(bits)
+    gt = res.signature[: code.message_bits]
+    ok = np.asarray(out["ok"])
+    hit = ok & np.all(np.asarray(out["message_bits"]) == gt[None], axis=1)
+    raw = float((np.asarray(bits) == res.signature[None]).mean())
+    print(f"raw tile bit accuracy : {raw:.3f}")
+    print(f"RS-exact recovery     : {hit.sum()}/{len(hit)} generations")
+    mse = float(jnp.mean(jnp.square(xw - ldm.decode(ae['dec'], z))))
+    print(f"distortion vs D(z)    : mse {mse:.5f}")
+    if raw < 0.95:
+        print("note: the 3-conv stand-in decoder saturates below the "
+              "paper's pretrained LDM; accuracy keeps rising with "
+              "--steps (mechanism check: should exceed 0.6 vs the 0.5 "
+              "chance floor)")
+    assert raw > 0.6, "fine-tune failed to move extraction accuracy"
+
+
+if __name__ == "__main__":
+    main()

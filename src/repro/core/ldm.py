@@ -1,0 +1,198 @@
+"""Tile-based LDM decoder fine-tuning (QRMark §4.2, Stable-Signature
+recipe at container scale).
+
+A small conv autoencoder stands in for the LDM VAE (f=4 downsampling,
+c-channel latents).  ``finetune_decoder`` fine-tunes a copy D_m of the
+decoder so that every reconstructed image carries the RS-encoded
+signature m_s, recoverable by the FROZEN tile extractor H_D from a
+randomly sampled grid tile — exactly the paper's pipeline:
+
+    z = E(x);  x' = D_m(z);  tile -> H_D -> BCE(m', m_s)
+    + lambda_i * perceptual(x', D(z))      [frozen original decoder]
+
+The Watson-VGG perceptual loss is replaced by an L2 in the frozen
+extractor's early conv feature space (no pretrained VGG exists in this
+offline container) — recorded as an adaptation in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import losses, tiling
+from repro.core.extractor import conv2d, conv_init, extractor_forward, \
+    _block
+from repro.core.rs.codec import DEFAULT_CODE, rs_encode
+from repro.data.pipeline import synth_image
+from repro.train import optimizer as opt_lib
+
+
+# ---------------------------------------------------------------------------
+# tiny VAE-style autoencoder (f=4)
+# ---------------------------------------------------------------------------
+
+
+def init_autoencoder(key, *, ch: int = 32, latent: int = 8):
+    ks = jax.random.split(key, 8)
+    return {
+        "enc": {
+            "c1": {"w": conv_init(ks[0], 3, 3, 3, ch), "b": jnp.zeros((ch,))},
+            "c2": {"w": conv_init(ks[1], 3, 3, ch, ch),
+                   "b": jnp.zeros((ch,))},
+            "to_z": {"w": conv_init(ks[2], 1, 1, ch, latent),
+                     "b": jnp.zeros((latent,))},
+        },
+        "dec": init_decoder(ks[3], ch=ch, latent=latent),
+    }
+
+
+def init_decoder(key, *, ch: int = 32, latent: int = 8):
+    ks = jax.random.split(key, 4)
+    return {
+        "from_z": {"w": conv_init(ks[0], 3, 3, latent, ch),
+                   "b": jnp.zeros((ch,))},
+        "c1": {"w": conv_init(ks[1], 3, 3, ch, ch), "b": jnp.zeros((ch,))},
+        "c2": {"w": conv_init(ks[2], 3, 3, ch, ch), "b": jnp.zeros((ch,))},
+        "out": {"w": conv_init(ks[3], 3, 3, ch, 3), "b": jnp.zeros((3,))},
+    }
+
+
+def _down2(x):
+    return jax.lax.reduce_window(x, 0.0, jax.lax.add, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID") / 4.0
+
+
+def _up2(x):
+    b, h, w, c = x.shape
+    return jax.image.resize(x, (b, 2 * h, 2 * w, c), "nearest")
+
+
+def encode(params, x):
+    e = params["enc"]
+    h = _down2(_block(e["c1"], x))
+    h = _down2(_block(e["c2"], h))
+    return conv2d(h, e["to_z"]["w"]) + e["to_z"]["b"]
+
+
+def decode(dec, z):
+    h = _block(dec["from_z"], z)
+    h = _block(dec["c1"], _up2(h))
+    h = _block(dec["c2"], _up2(h))
+    return jnp.tanh(conv2d(h, dec["out"]["w"]) + dec["out"]["b"])
+
+
+# ---------------------------------------------------------------------------
+# stage 0: pretrain the autoencoder (reconstruction)
+# ---------------------------------------------------------------------------
+
+
+def pretrain_autoencoder(key, *, img_size=64, steps=150, batch=16,
+                         verbose=False):
+    params = init_autoencoder(key)
+    opt_cfg = opt_lib.AdamWConfig(lr=2e-3, warmup_steps=20,
+                                  total_steps=steps, weight_decay=0.0,
+                                  clip_norm=10.0)
+    opt = opt_lib.init_opt_state(params)
+
+    @jax.jit
+    def step(params, opt, x):
+        def loss_fn(p):
+            return jnp.mean(jnp.square(decode(p["dec"], encode(p, x)) - x))
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = opt_lib.adamw_update(opt_cfg, params, g, opt)
+        return params, opt, loss
+
+    for i in range(steps):
+        imgs = np.stack([synth_image(i * batch + j, img_size)
+                         for j in range(batch)])
+        x = jnp.asarray(imgs, jnp.float32) / 127.5 - 1.0
+        params, opt, loss = step(params, opt, x)
+        if verbose and i % 50 == 0:
+            print(f"[ae] step {i} recon={float(loss):.4f}", flush=True)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# stage 1: fine-tune D_m against the frozen extractor (paper §4.2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FinetuneResult:
+    decoder: dict
+    history: list
+    signature: np.ndarray  # the RS-encoded codeword bits m_s
+
+
+def extractor_features(hd_params, x, n_blocks=2):
+    h = x
+    for blk in hd_params["blocks"][:n_blocks]:
+        h = _block(blk, h)
+    return h
+
+
+def finetune_decoder(ae_params, hd_params, *, code=DEFAULT_CODE,
+                     message_bits: Optional[np.ndarray] = None,
+                     tile: int = 16, img_size: int = 64, steps: int = 100,
+                     batch: int = 4, lam_i: float = 2.0, lr: float = 1e-4,
+                     seed: int = 0, verbose=False) -> FinetuneResult:
+    """AdamW for ``steps`` iterations (paper: 100 iters, batch 4,
+    warmup 20 to 1e-4 then decay)."""
+    rng = np.random.default_rng(seed)
+    if message_bits is None:
+        message_bits = rng.integers(0, 2, code.message_bits)
+    m_s = jnp.asarray(rs_encode(code, message_bits))  # codeword bits
+
+    dec_m = jax.tree.map(jnp.copy, ae_params["dec"])  # D_m init = D
+    frozen_dec = ae_params["dec"]
+    opt_cfg = opt_lib.AdamWConfig(lr=lr, warmup_steps=20, total_steps=steps,
+                                  weight_decay=0.0, clip_norm=10.0,
+                                  min_lr_frac=0.01)
+    opt = opt_lib.init_opt_state(dec_m)
+
+    @jax.jit
+    def step(dec_m, opt, x, key):
+        z = encode(ae_params, x)  # frozen encoder
+
+        def loss_fn(dm):
+            x_w = decode(dm, z)
+            tiles_, _ = tiling.select_tiles("random_grid", key, x_w, tile)
+            logits = extractor_forward(hd_params, tiles_)
+            msg = jnp.broadcast_to(m_s, (x.shape[0], m_s.shape[0]))
+            l_m = losses.message_loss(logits, msg)
+            # perceptual proxy: frozen-extractor feature L2 vs D(z)
+            x_o = decode(frozen_dec, z)
+            l_i = jnp.mean(jnp.square(
+                extractor_features(hd_params, x_w)
+                - extractor_features(hd_params, x_o)))
+            l_i = l_i + jnp.mean(jnp.square(x_w - x_o))
+            acc = losses.bit_accuracy(logits, msg)
+            return l_m + lam_i * l_i, (l_m, l_i, acc)
+
+        (loss, (l_m, l_i, acc)), g = jax.value_and_grad(
+            loss_fn, has_aux=True)(dec_m)
+        dec_m, opt, _ = opt_lib.adamw_update(opt_cfg, dec_m, g, opt)
+        return dec_m, opt, loss, l_m, l_i, acc
+
+    key = jax.random.key(seed)
+    hist = []
+    for i in range(steps):
+        imgs = np.stack([synth_image(5_000_000 + i * batch + j, img_size)
+                         for j in range(batch)])
+        x = jnp.asarray(imgs, jnp.float32) / 127.5 - 1.0
+        key, k = jax.random.split(key)
+        dec_m, opt, loss, l_m, l_i, acc = step(dec_m, opt, x, k)
+        if i % 20 == 0 or i == steps - 1:
+            hist.append({"step": i, "loss": float(loss),
+                         "L_m": float(l_m), "L_i": float(l_i),
+                         "bit_acc": float(acc)})
+            if verbose:
+                print(f"[ft] step {i:3d} loss={float(loss):.4f} "
+                      f"L_m={float(l_m):.4f} acc={float(acc):.3f}",
+                      flush=True)
+    return FinetuneResult(dec_m, hist, np.asarray(m_s))

@@ -1,0 +1,60 @@
+"""QRMark training losses (§4.1).
+
+L = L_m + lambda * L_RS, where L_m is the standard BCE message loss and
+L_RS = [max(0, E - t)]^2 penalises only bit errors beyond the
+Reed-Solomon correction capacity (errors the code can fix are free).
+E is counted over the first k symbols' bits with a straight-through
+surrogate so the hinge is differentiable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def message_loss(logits, messages):
+    """BCE with logits.  logits/messages: (b, n_bits)."""
+    m = messages.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * m
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def rs_aware_loss(logits, messages, *, t_symbols: float, symbol_bits: int,
+                  k_symbols: int = None, temp: float = 1.0):
+    """[max(0, E - t)]^2 with a soft SYMBOL error count (paper §4.1).
+
+    e_i = 1[sign(m'_i) != m_i] per bit; a symbol is wrong if any of its m
+    bits is wrong: soft_sym_err = 1 - prod_bits (1 - p_bit_err).  E sums
+    over the first k symbols (the information part); errors within the RS
+    capacity t incur no cost, beyond-capacity errors are squared.
+    """
+    m_pm = 2.0 * messages.astype(jnp.float32) - 1.0
+    margin = logits * m_pm  # >0 means correct
+    p_err = jax.nn.sigmoid(-margin / temp)  # (b, n_bits)
+    b = p_err.shape[0]
+    sym = p_err.reshape(b, -1, symbol_bits)
+    if k_symbols is not None:
+        sym = sym[:, :k_symbols]
+    sym_err = 1.0 - jnp.prod(1.0 - sym, axis=-1)  # (b, n_sym)
+    E = sym_err.sum(axis=-1)
+    return jnp.mean(jnp.square(jnp.maximum(0.0, E - t_symbols)))
+
+
+def qrmark_loss(logits, messages, *, code, lam: float = 1.0):
+    lm = message_loss(logits, messages)
+    lrs = rs_aware_loss(logits, messages, t_symbols=float(code.t),
+                        symbol_bits=code.m, k_symbols=code.k)
+    return lm + lam * lrs, {"L_m": lm, "L_RS": lrs}
+
+
+def bit_accuracy(logits, messages):
+    pred = (logits > 0).astype(jnp.int32)
+    return jnp.mean((pred == messages.astype(jnp.int32)).astype(
+        jnp.float32))
+
+
+def word_accuracy(bits_pred, messages):
+    eq = jnp.all(bits_pred.astype(jnp.int32)
+                 == messages.astype(jnp.int32), axis=-1)
+    return jnp.mean(eq.astype(jnp.float32))

@@ -1,0 +1,183 @@
+"""ML-based tile-size predictor (QRMark Appendix B.2).
+
+The paper uses EfficientNet features + an XGBoost regressor to estimate,
+in one forward pass, which tile size an image was watermarked with.  In
+this offline container there is no pretrained EfficientNet, so the
+feature extractor is adapted to the actual physics of tile watermarks:
+embedding the same pattern bank in every l x l grid cell makes the
+high-passed image PERIODIC with pitch l, so shifted autocorrelations at
+the candidate pitches (+ spectral band energies) are near-sufficient
+statistics.  The regressor is gradient-boosted depth-1 trees (stumps)
+written from scratch — the same model class as XGBoost.  Both changes
+are recorded in DESIGN.md §Adaptations.
+
+Training-data collection and model fitting run offline (no runtime
+profiling), matching the paper's deployment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.extractor import highpass
+
+CANDIDATE_TILES = (16, 32, 48, 64, 80)
+
+
+# ---------------------------------------------------------------------------
+# features
+# ---------------------------------------------------------------------------
+
+
+def tile_features(images) -> np.ndarray:
+    """images (b, H, W, 3) float in [-1,1] -> (b, F) features.
+
+    F = shifted autocorrelation of the high-passed image at each
+    candidate pitch (both axes) + coarse FFT band energies."""
+    x = highpass(jnp.asarray(images, jnp.float32))
+    x = x - x.mean(axis=(1, 2, 3), keepdims=True)
+    b, H, W, _ = x.shape
+    denom = jnp.mean(jnp.square(x), axis=(1, 2, 3)) + 1e-8
+    feats = []
+    for l in CANDIDATE_TILES:
+        if l < H:
+            ac_y = jnp.mean(x[:, l:] * x[:, :-l], axis=(1, 2, 3)) / denom
+        else:
+            ac_y = jnp.zeros((b,))
+        if l < W:
+            ac_x = jnp.mean(x[:, :, l:] * x[:, :, :-l],
+                            axis=(1, 2, 3)) / denom
+        else:
+            ac_x = jnp.zeros((b,))
+        feats += [ac_y, ac_x]
+    # coarse spectral bands of the mean channel
+    g = x.mean(-1)
+    F = jnp.abs(jnp.fft.rfft2(g))
+    low = jnp.mean(F[:, : H // 8, : W // 8], axis=(1, 2))
+    mid = jnp.mean(F[:, H // 8: H // 4, : W // 4], axis=(1, 2))
+    high = jnp.mean(F[:, H // 4:, :], axis=(1, 2))
+    tot = low + mid + high + 1e-8
+    feats += [low / tot, mid / tot, high / tot]
+    return np.asarray(jnp.stack(feats, axis=1))
+
+
+# ---------------------------------------------------------------------------
+# gradient-boosted stumps (from-scratch XGBoost stand-in)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Stump:
+    feature: int
+    threshold: float
+    left: float
+    right: float
+
+    def predict(self, X):
+        return np.where(X[:, self.feature] <= self.threshold, self.left,
+                        self.right)
+
+
+@dataclasses.dataclass
+class BoostedStumps:
+    base: float
+    stumps: List[Stump]
+    lr: float
+
+    def predict(self, X) -> np.ndarray:
+        out = np.full(X.shape[0], self.base)
+        for s in self.stumps:
+            out += self.lr * s.predict(X)
+        return out
+
+
+def fit_boosted_stumps(X, y, *, n_rounds=120, lr=0.15,
+                       n_thresholds=16) -> BoostedStumps:
+    """L2 gradient boosting with depth-1 trees."""
+    X = np.asarray(X, np.float64)
+    y = np.asarray(y, np.float64)
+    base = float(y.mean())
+    pred = np.full_like(y, base)
+    stumps: List[Stump] = []
+    for _ in range(n_rounds):
+        resid = y - pred
+        best = None
+        for f in range(X.shape[1]):
+            xs = X[:, f]
+            qs = np.quantile(xs, np.linspace(0.05, 0.95, n_thresholds))
+            for t in qs:
+                m = xs <= t
+                if m.sum() == 0 or m.sum() == len(xs):
+                    continue
+                lmean = resid[m].mean()
+                rmean = resid[~m].mean()
+                sse = (np.square(resid[m] - lmean).sum()
+                       + np.square(resid[~m] - rmean).sum())
+                if best is None or sse < best[0]:
+                    best = (sse, Stump(f, float(t), float(lmean),
+                                       float(rmean)))
+        if best is None:
+            break
+        stumps.append(best[1])
+        pred += lr * best[1].predict(X)
+    return BoostedStumps(base, stumps, lr)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end predictor
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TileSizePredictor:
+    model: BoostedStumps
+    candidates: Sequence[int] = CANDIDATE_TILES
+
+    def predict(self, images) -> np.ndarray:
+        raw = self.model.predict(tile_features(images))
+        cands = np.asarray(self.candidates, np.float64)
+        return cands[np.argmin(np.abs(raw[:, None] - cands[None, :]),
+                               axis=1)].astype(int)
+
+
+def build_training_set(encoder_params_by_tile: dict, *, n_per_tile=64,
+                       img_size=128, seed=0):
+    """Watermark synthetic images at each tile size with the trained
+    encoders; returns (features, labels)."""
+    from repro.core import tiling
+    from repro.core.extractor import encoder_forward
+    from repro.data.pipeline import synth_image
+
+    rng = np.random.default_rng(seed)
+    Xs, ys = [], []
+    for tile, (enc_params, code) in encoder_params_by_tile.items():
+        gy = img_size // tile
+        size = gy * tile
+        imgs = np.stack([synth_image(seed * 100000 + tile * 1000 + i, size)
+                         for i in range(n_per_tile)])
+        x = jnp.asarray(imgs, jnp.float32) / 127.5 - 1.0
+        tiles_ = tiling.grid_partition(x, tile)
+        b, g = tiles_.shape[:2]
+        msgs = jnp.asarray(rng.integers(0, 2,
+                                        (b, code.codeword_bits)))
+        msgs = jnp.repeat(msgs, g, axis=0)
+        xw_flat, _ = encoder_forward(enc_params,
+                                     tiles_.reshape(-1, tile, tile, 3),
+                                     msgs)
+        xw = xw_flat.reshape(b, gy, gy, tile, tile, 3).transpose(
+            0, 1, 3, 2, 4, 5).reshape(b, size, size, 3)
+        if size != img_size:
+            xw = jax.image.resize(xw, (b, img_size, img_size, 3),
+                                  "bilinear")
+        Xs.append(tile_features(xw))
+        ys.append(np.full(b, tile, np.float64))
+    return np.concatenate(Xs), np.concatenate(ys)
+
+
+def train_predictor(encoder_params_by_tile: dict, **kw) -> TileSizePredictor:
+    X, y = build_training_set(encoder_params_by_tile, **kw)
+    return TileSizePredictor(fit_boosted_stumps(X, y))

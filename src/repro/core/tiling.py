@@ -1,0 +1,58 @@
+"""Tile selection strategies (QRMark Table 1): random, random_grid, fixed.
+
+All strategies are jit-able: tile extraction is a dynamic_slice so the
+whole detection pipeline stays on device.  ``random_grid`` (the QRMark
+default) partitions the image into an axis-aligned grid of l x l cells and
+samples one cell uniformly; ``random`` samples any aligned-to-nothing
+l x l window; ``fixed`` crops the top-left corner.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+STRATEGIES = ("random", "random_grid", "fixed")
+
+
+def tile_offsets(strategy: str, key, image_hw, tile: int, batch: int):
+    """Per-image (y, x) offsets, shape (batch, 2), int32."""
+    H, W = image_hw
+    if strategy == "fixed":
+        return jnp.zeros((batch, 2), jnp.int32)
+    if strategy == "random":
+        ky, kx = jax.random.split(key)
+        y = jax.random.randint(ky, (batch,), 0, H - tile + 1)
+        x = jax.random.randint(kx, (batch,), 0, W - tile + 1)
+        return jnp.stack([y, x], axis=1).astype(jnp.int32)
+    if strategy == "random_grid":
+        gy, gx = H // tile, W // tile
+        k = jax.random.randint(key, (batch,), 0, gy * gx)
+        y = (k // gx) * tile
+        x = (k % gx) * tile
+        return jnp.stack([y, x], axis=1).astype(jnp.int32)
+    raise ValueError(f"unknown tiling strategy {strategy!r}")
+
+
+def extract_tiles(images, offsets, tile: int):
+    """images (b, H, W, C), offsets (b, 2) -> (b, tile, tile, C)."""
+
+    def one(img, off):
+        return jax.lax.dynamic_slice(
+            img, (off[0], off[1], 0), (tile, tile, img.shape[-1]))
+
+    return jax.vmap(one)(images, offsets)
+
+
+def select_tiles(strategy: str, key, images, tile: int):
+    b, H, W, _ = images.shape
+    offs = tile_offsets(strategy, key, (H, W), tile, b)
+    return extract_tiles(images, offs, tile), offs
+
+
+def grid_partition(images, tile: int):
+    """All non-overlapping l x l tiles: (b, gy*gx, tile, tile, C)."""
+    b, H, W, C = images.shape
+    gy, gx = H // tile, W // tile
+    x = images[:, : gy * tile, : gx * tile]
+    x = x.reshape(b, gy, tile, gx, tile, C).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, gy * gx, tile, tile, C)

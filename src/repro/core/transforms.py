@@ -1,0 +1,167 @@
+"""Image transforms: preprocessing ops (Table 1) + evaluation attacks.
+
+Everything is pure JAX so the whole detection pipeline (and the training
+transform set T) stays on device.  ``jpeg`` is the standard blockwise
+DCT-quantisation surrogate (differentiable, matmul-form — TPU-friendly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# preprocessing (QRMark Table 1, Preprocess stage)
+# ---------------------------------------------------------------------------
+
+
+def resize_to(images, size: int):
+    b, h, w, c = images.shape
+    return jax.image.resize(images, (b, size, size, c), method="bilinear")
+
+
+def center_crop(images, size: int):
+    b, h, w, c = images.shape
+    y0, x0 = (h - size) // 2, (w - size) // 2
+    return images[:, y0: y0 + size, x0: x0 + size, :]
+
+
+IMAGENET_MEAN = np.array([0.485, 0.456, 0.406], np.float32)
+IMAGENET_STD = np.array([0.229, 0.224, 0.225], np.float32)
+
+
+def normalize(images, mean=None, std=None):
+    """uint8/float [0,1] -> VQGAN-ish normalised float."""
+    mean = IMAGENET_MEAN if mean is None else mean
+    std = IMAGENET_STD if std is None else std
+    x = images.astype(jnp.float32)
+    return (x - jnp.asarray(mean)) / jnp.asarray(std)
+
+
+def preprocess_reference(raw, *, resize: int = 288, crop: int = 256,
+                         mean=None, std=None):
+    """Unfused Resize -> CenterCrop -> Normalize (the fragmented-kernel
+    baseline the paper profiles; the Pallas kernel fuses this)."""
+    x = raw.astype(jnp.float32) / 255.0
+    x = resize_to(x, resize)
+    x = center_crop(x, crop)
+    return normalize(x, mean, std)
+
+
+# ---------------------------------------------------------------------------
+# evaluation attacks (QRMark Table 1, Evaluation stage)
+# ---------------------------------------------------------------------------
+
+
+def attack_crop(images, frac: float):
+    """Keep the central ``frac`` of the area, resize back."""
+    b, h, w, c = images.shape
+    keep = max(int(round((frac ** 0.5) * h)), 4)
+    x = center_crop(images, keep)
+    return jax.image.resize(x, (b, h, w, c), method="bilinear")
+
+
+def attack_resize(images, frac: float):
+    b, h, w, c = images.shape
+    nh, nw = max(int(h * frac), 4), max(int(w * frac), 4)
+    x = jax.image.resize(images, (b, nh, nw, c), method="bilinear")
+    return jax.image.resize(x, (b, h, w, c), method="bilinear")
+
+
+def attack_brightness(images, factor: float):
+    return jnp.clip(images * factor, -3.0, 3.0)
+
+
+def attack_contrast(images, factor: float):
+    mu = images.mean(axis=(1, 2, 3), keepdims=True)
+    return jnp.clip(mu + (images - mu) * factor, -3.0, 3.0)
+
+
+def attack_saturation(images, factor: float):
+    grey = images.mean(axis=-1, keepdims=True)
+    return jnp.clip(grey + (images - grey) * factor, -3.0, 3.0)
+
+
+def attack_sharpness(images, factor: float):
+    blur = attack_blur(images)
+    return jnp.clip(blur + (images - blur) * factor, -3.0, 3.0)
+
+
+def attack_blur(images, k: int = 3):
+    c = images.shape[-1]
+    kern = jnp.ones((k, k, 1, 1), jnp.float32) / (k * k)
+    kern = jnp.tile(kern, (1, 1, 1, c))
+    return jax.lax.conv_general_dilated(
+        images, kern, (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c)
+
+
+@functools.lru_cache(maxsize=None)
+def _dct8():
+    # NOTE: must return numpy (a cached jnp array created inside a jit
+    # trace would leak a tracer into later calls)
+    k = np.arange(8)
+    n = np.arange(8)
+    D = np.sqrt(2 / 8) * np.cos(np.pi * (2 * n[None] + 1) * k[:, None] / 16)
+    D[0] /= np.sqrt(2)
+    return D.astype(np.float32)
+
+
+# luminance quantisation table (JPEG Annex K), quality-scaled
+_QTAB = np.array(
+    [[16, 11, 10, 16, 24, 40, 51, 61], [12, 12, 14, 19, 26, 58, 60, 55],
+     [14, 13, 16, 24, 40, 57, 69, 56], [14, 17, 22, 29, 51, 87, 80, 62],
+     [18, 22, 37, 56, 68, 109, 103, 77], [24, 35, 55, 64, 81, 104, 113, 92],
+     [49, 64, 78, 87, 103, 121, 120, 101],
+     [72, 92, 95, 98, 112, 100, 103, 99]], np.float32)
+
+
+def attack_jpeg(images, quality: int = 50):
+    """Blockwise DCT quantisation surrogate of JPEG compression."""
+    b, h, w, c = images.shape
+    hp, wp = -(-h // 8) * 8, -(-w // 8) * 8
+    x = jnp.pad(images, ((0, 0), (0, hp - h), (0, wp - w), (0, 0)),
+                mode="edge")
+    scale = 50.0 / quality if quality < 50 else 2 - quality / 50.0
+    q = jnp.maximum(jnp.asarray(_QTAB) * scale, 1.0) / 128.0
+    D = jnp.asarray(_dct8())
+    blocks = x.reshape(b, hp // 8, 8, wp // 8, 8, c)
+    coef = jnp.einsum("ij,bhjwkc,lk->bhiwlc", D, blocks, D)
+    coef = jnp.round(coef / q[None, None, :, None, :, None]) \
+        * q[None, None, :, None, :, None]
+    rec = jnp.einsum("ji,bhjwkc,kl->bhiwlc", D, coef, D)
+    return rec.reshape(b, hp, wp, c)[:, :h, :w, :]
+
+
+def attack_overlay_text(images, intensity: float = 1.0):
+    """Overlay a fixed block pattern simulating burned-in text."""
+    b, h, w, c = images.shape
+    yy, xx = jnp.meshgrid(jnp.arange(h), jnp.arange(w), indexing="ij")
+    band = (yy > h * 3 // 4) & (yy < h * 7 // 8)
+    glyph = ((xx // 6) % 2 == 0) & ((xx > w // 8) & (xx < w * 7 // 8))
+    mask = (band & glyph).astype(jnp.float32)[None, :, :, None]
+    return images * (1 - mask) + intensity * mask
+
+
+ATTACKS = {
+    "none": lambda x: x,
+    "crop_0.1": lambda x: attack_crop(x, 0.1),
+    "crop_0.5": lambda x: attack_crop(x, 0.5),
+    "resize_0.5": lambda x: attack_resize(x, 0.5),
+    "resize_0.7": lambda x: attack_resize(x, 0.7),
+    "blur": attack_blur,
+    "brightness_2": lambda x: attack_brightness(x, 2.0),
+    "contrast_2": lambda x: attack_contrast(x, 2.0),
+    "saturation_2": lambda x: attack_saturation(x, 2.0),
+    "sharpness_2": lambda x: attack_sharpness(x, 2.0),
+    "jpeg_50": lambda x: attack_jpeg(x, 50),
+    "overlay_text": attack_overlay_text,
+}
+
+# the paper's Stable-Signature adversarial set (Table 2 "Adv." column)
+STABLE_SIG_ATTACKS = ("crop_0.5", "resize_0.7", "jpeg_50", "brightness_2",
+                      "contrast_2", "saturation_2", "sharpness_2",
+                      "overlay_text")

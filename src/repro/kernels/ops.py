@@ -1,0 +1,30 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Import surface used by the rest of the framework; each op dispatches to
+the Pallas kernel (interpret mode on CPU, compiled on TPU) and has a
+pure-jnp oracle in ref.py.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fused_preprocess import fused_preprocess as \
+    _fused_preprocess
+
+
+def fused_preprocess(raw, *, resize: int = 256, crop: int = 256,
+                     mean=None, std=None):
+    """Fused Resize->CenterCrop->Normalize (QRMark App. B.1, TPU form)."""
+    interpret = jax.default_backend() != "tpu"
+    return _fused_preprocess(raw, resize=resize, crop=crop, mean=mean,
+                             std=std, interpret=interpret)
+
+
+def rs_decode(bits, *, code=None):
+    """Batched Berlekamp-Welch decode (Pallas kernel for the default
+    (15,12) GF(16) code; jax_rs fallback otherwise)."""
+    from repro.core.rs.codec import DEFAULT_CODE
+    from repro.kernels.rs_decode import rs_decode_batch
+    interpret = jax.default_backend() != "tpu"
+    return rs_decode_batch(bits, code=code or DEFAULT_CODE,
+                           interpret=interpret)

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets).
+
+These are the semantic ground truth: each kernel sweep test asserts the
+pallas_call (interpret mode on CPU) matches these within tolerance.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.transforms import IMAGENET_MEAN, IMAGENET_STD
+
+
+# ---------------------------------------------------------------------------
+# fused preprocess: Raw -> Resize -> CenterCrop -> Normalize
+# ---------------------------------------------------------------------------
+
+
+def resize_matrix(n_in: int, n_out: int, crop_off: int = 0,
+                  n_crop: int = None) -> np.ndarray:
+    """Row-interpolation matrix M (n_crop, n_in): out = M @ in reproduces
+    bilinear resize (half-pixel centers, antialias=False, edge clamp)
+    followed by cropping rows [crop_off, crop_off + n_crop)."""
+    n_crop = n_out if n_crop is None else n_crop
+    scale = n_in / n_out
+    M = np.zeros((n_crop, n_in), np.float32)
+    for o in range(n_crop):
+        src = (o + crop_off + 0.5) * scale - 0.5
+        lo = int(np.floor(src))
+        w = src - lo
+        lo_c = min(max(lo, 0), n_in - 1)
+        hi_c = min(max(lo + 1, 0), n_in - 1)
+        M[o, lo_c] += 1.0 - w
+        M[o, hi_c] += w
+    return M
+
+
+def fused_preprocess_ref(raw, *, resize: int, crop: int,
+                         mean=None, std=None):
+    """Oracle: uint8 (b, H, W, 3) -> normalized f32 (b, crop, crop, 3)."""
+    mean = IMAGENET_MEAN if mean is None else np.asarray(mean, np.float32)
+    std = IMAGENET_STD if std is None else np.asarray(std, np.float32)
+    b, H, W, C = raw.shape
+    x = raw.astype(jnp.float32) / 255.0
+    x = jax.image.resize(x, (b, resize, resize, C), method="bilinear",
+                         antialias=False)
+    y0 = (resize - crop) // 2
+    x = x[:, y0: y0 + crop, y0: y0 + crop, :]
+    return (x - jnp.asarray(mean)) / jnp.asarray(std)
+
+
+# ---------------------------------------------------------------------------
+# batched GF(2^m) Reed-Solomon syndrome/decode helper
+# ---------------------------------------------------------------------------
+
+
+def gf_mul_ref(a, b, exp, log):
+    out = exp[(log[a] + log[b])]
+    return jnp.where((a == 0) | (b == 0), 0, out)
+
+
+def rs_eval_ref(coeffs, xs, exp, log):
+    """Batched Horner: coeffs (b, d+1), xs (n,) -> (b, n)."""
+    b = coeffs.shape[0]
+    acc = jnp.zeros((b, xs.shape[0]), jnp.int32)
+    for i in range(coeffs.shape[-1] - 1, -1, -1):
+        acc = jnp.bitwise_xor(gf_mul_ref(acc, xs[None, :], exp, log),
+                              coeffs[:, i: i + 1])
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# extractor conv3x3 block (conv + bias + channel-norm + relu)
+# ---------------------------------------------------------------------------
+
+
+def conv_block_ref(x, w, b, eps: float = 1e-5):
+    """x (n, h, w, cin), w (3, 3, cin, cout) SAME conv -> norm -> relu."""
+    y = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = y + b
+    mu = y.mean(axis=-1, keepdims=True)
+    var = y.var(axis=-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + eps)
+    return jax.nn.relu(y)

@@ -1,0 +1,126 @@
+"""Post-SPMD HLO analysis: collective-traffic accounting + roofline terms.
+
+``compiled.cost_analysis()`` gives FLOPs and HBM bytes but no collective
+traffic, so we parse ``compiled.as_text()`` (per-partition shapes) and sum
+operand sizes of every collective, weighted by the ring-algorithm transfer
+factor for its group size ``n``:
+
+    all-reduce        2 (n-1)/n  x bytes     (reduce-scatter + all-gather)
+    all-gather          (n-1)/n  x out bytes
+    reduce-scatter      (n-1)/n  x in bytes
+    all-to-all          (n-1)/n  x bytes
+    collective-permute          1 x bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "fp8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+\[[0-9,]*\][^ ]*|\([^)]*\))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, float]  # ring-transfer bytes per device
+    raw_bytes_by_kind: Dict[str, float]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    xfer: Dict[str, float] = {}
+    raw: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        out_shape, kind = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # async pair: count only the -start
+        size = _shape_bytes(out_shape)
+        # group size n
+        n = 0
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = int(g.group(2))
+        else:
+            ge = _GROUPS_EXPLICIT_RE.search(line)
+            if ge:
+                n = len(ge.group(1).split(","))
+        n = max(n, 2)
+        if kind == "all-reduce":
+            factor, base = 2 * (n - 1) / n, size
+        elif kind == "all-gather":
+            factor, base = (n - 1) / n, size  # output = gathered size
+        elif kind == "reduce-scatter":
+            # output is the shard; input ~= shard * n
+            factor, base = (n - 1) / n, size * n
+        elif kind == "all-to-all":
+            factor, base = (n - 1) / n, size
+        else:  # collective-permute
+            factor, base = 1.0, size
+        counts[kind] = counts.get(kind, 0) + 1
+        xfer[kind] = xfer.get(kind, 0.0) + factor * base
+        raw[kind] = raw.get(kind, 0.0) + float(base)
+    return CollectiveStats(counts, xfer, raw)
+
+
+def roofline_terms(cost: dict, coll: CollectiveStats, n_chips: int,
+                   *, peak_flops: float, hbm_bw: float, link_bw: float,
+                   ici_links: int = 1) -> dict:
+    """Seconds per step for each roofline term.
+
+    cost_analysis() FLOPs/bytes on a post-SPMD module are per-partition on
+    the CPU backend (the module IS the per-device program); collective
+    bytes from the HLO are per-device already.
+    """
+    flops = float(cost.get("flops", 0.0))
+    bytes_hbm = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / peak_flops
+    t_memory = bytes_hbm / hbm_bw
+    t_coll = coll.total_bytes / (link_bw * max(ici_links, 1))
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": bytes_hbm,
+        "collective_bytes_per_device": coll.total_bytes,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "collective_counts": coll.counts,
+        "collective_bytes_by_kind": coll.bytes_by_kind,
+    }

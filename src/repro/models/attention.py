@@ -1,0 +1,243 @@
+"""Attention: GQA with optional sliding window, blocked (flash-style)
+softmax for long sequences, and KV-cache decode.
+
+Two execution paths:
+  * ``blocked_attention`` — online-softmax over KV blocks via ``lax.scan``;
+    memory O(s * kv_block) instead of O(s^2).  Used for train/prefill.
+    ``causal_skip`` drops KV blocks strictly above the diagonal per Q block
+    (halves attention FLOPs; this is one of the §Perf hillclimb levers).
+  * ``decode_attention`` — single-token query against a cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# blocked flash-style attention (pure JAX)
+# ---------------------------------------------------------------------------
+
+
+def blocked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                      kv_len=None, q_block=512, kv_block=512,
+                      causal_skip=True):
+    """q: (b, sq, h, hd); k/v: (b, skv, kvh, hd).  GQA via head grouping.
+
+    ``q_offset``: absolute position of q[0] (for prefill continuation).
+    ``kv_len``: number of valid kv entries (scalar or None = all).
+    ``causal_skip``: statically skip fully-masked KV blocks (upper
+    triangle).  Grid is (nq, nkv) lower-triangular when causal.
+    """
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    rep = h // kvh
+    scale = hd ** -0.5
+
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    # pad to block multiples
+    sq_p = -(-sq // q_block) * q_block
+    skv_p = -(-skv // kv_block) * kv_block
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+    nq, nkv = sq_p // q_block, skv_p // kv_block
+
+    # (b, nq, qb, kvh, rep, hd)
+    qb = qp.reshape(b, nq, q_block, kvh, rep, hd)
+    kb = kp.reshape(b, nkv, kv_block, kvh, hd)
+    vb = vp.reshape(b, nkv, kv_block, kvh, hd)
+
+    q_pos = q_offset + jnp.arange(sq_p).reshape(nq, q_block)
+    kv_pos = jnp.arange(skv_p).reshape(nkv, kv_block)
+    valid_kv = skv if kv_len is None else kv_len
+
+    def q_block_fn(qi, qblk, qpos):
+        # qblk: (b, qb, kvh, rep, hd); qpos: (qb,)
+        m0 = jnp.full((b, q_block, kvh, rep), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, q_block, kvh, rep), jnp.float32)
+        a0 = jnp.zeros((b, q_block, kvh, rep, hd), jnp.float32)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kblk, vblk, kpos = inp
+            # matmuls stay in the storage dtype with f32 ACCUMULATION
+            # (preferred_element_type) — upcasting K/V first materialises
+            # f32 copies of the whole cache (§Perf hillclimb, cell B it.3)
+            s = jnp.einsum("bqgrd,bkgd->bqgrk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = kpos[None, :] < valid_kv
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            if window:
+                mask = mask & (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqgrk,bkgd->bqgrd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        if causal and causal_skip:
+            # only KV blocks whose start can be <= this q block's end
+            hi = min(nkv, int((qi + 1) * q_block + kv_block - 1) // kv_block)
+            hi = max(hi, 1)
+        else:
+            hi = nkv
+        xs = (kb[:, :hi].swapaxes(0, 1), vb[:, :hi].swapaxes(0, 1),
+              kv_pos[:hi])
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), xs)
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    outs = []
+    for qi in range(nq):  # static python loop: per-block kv bounds differ
+        outs.append(q_block_fn(qi, qb[:, qi], q_pos[qi]))
+    out = jnp.stack(outs, axis=1)  # (b, nq, qb, kvh, rep, hd)
+    out = out.reshape(b, sq_p, h, hd)[:, :sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, cache_len, window=0,
+                     positions=None):
+    """One-step decode.  q: (b, 1, h, hd); caches: (b, S, kvh, hd).
+
+    ``cache_len``: number of valid entries (traced scalar ok).
+    ``positions``: absolute position of each cache slot (b, S) for ring
+    buffers (SWA); None means slot i holds position i.
+    """
+    b, _, h, hd = q.shape
+    _, S, kvh, _ = k_cache.shape
+    rep = h // kvh
+    scale = hd ** -0.5
+    # storage-dtype matmul + f32 accumulation: never materialise an f32
+    # copy of the cache (it dominated decode HBM bytes — §Perf cell B)
+    qf = q.reshape(b, kvh, rep, hd).astype(k_cache.dtype)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qf, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    slot = jnp.arange(S)
+    if positions is None:
+        mask = slot[None, :] < cache_len  # (1 or b, S)
+    else:
+        q_pos = cache_len - 1
+        mask = (positions <= q_pos) & (positions >= 0)
+        if window:
+            mask = mask & (positions > q_pos - window)
+    s = jnp.where(mask[:, None, None, :] if mask.ndim == 2
+                  else mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrk,bkgd->bgrd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full attention layer (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg, dtype=jnp.float32):
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, kvh * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, kvh * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (h * hd, d), dtype=dtype),
+    }
+
+
+def attn_forward(params, x, cfg, *, mode, cache=None, cache_index=None,
+                 positions=None, cross_kv=None, causal=True):
+    """Returns (out, new_cache).
+
+    mode: 'train' | 'prefill' | 'decode'.
+    cache: {"k": (b,S,kvh,hd), "v": ...} for self-attention decode.
+    cross_kv: precomputed (k, v) for cross-attention (enc-dec); rope skipped.
+    """
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(b, s, h, hd)
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = blocked_attention(q, k, v, causal=False) if mode != "decode" \
+            else decode_attention(q, k, v, cache_len=k.shape[1])
+        return (out.reshape(b, s, h * hd) @ params["wo"].astype(dt)), cache
+
+    k = (x @ params["wk"].astype(dt)).reshape(b, s, kvh, hd)
+    v = (x @ params["wv"].astype(dt)).reshape(b, s, kvh, hd)
+    if positions is None:
+        base = 0 if cache_index is None else cache_index
+        positions = base + jnp.arange(s)[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if mode == "decode":
+        S = cache["k"].shape[1]
+        if cfg.sliding_window and cfg.sliding_window < S:
+            raise ValueError("SWA cache must be <= window")
+        slot = (cache_index % S) if cfg.sliding_window else cache_index
+        k_cache = cache["k"].at[:, slot].set(k[:, 0])
+        v_cache = cache["v"].at[:, slot].set(v[:, 0])
+        if cfg.sliding_window:
+            # ring buffer: slot i holds position, tracked explicitly
+            pos = cache["pos"].at[:, slot].set(positions[:, 0]) \
+                if "pos" in cache else None
+            out = decode_attention(q, k_cache, v_cache,
+                                   cache_len=cache_index + 1,
+                                   window=cfg.sliding_window,
+                                   positions=pos)
+            new_cache = {"k": k_cache, "v": v_cache}
+            if pos is not None:
+                new_cache["pos"] = pos
+        else:
+            out = decode_attention(q, k_cache, v_cache,
+                                   cache_len=cache_index + 1)
+            new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        out = blocked_attention(q, k, v, causal=causal,
+                                window=cfg.sliding_window)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = make_prefill_cache(cfg, k, v, positions)
+    out = out.reshape(b, s, h * hd) @ params["wo"].astype(dt)
+    return out, new_cache
+
+
+def make_prefill_cache(cfg, k, v, positions):
+    """Turn prefill K/V into a decode cache (ring-compressed for SWA)."""
+    b, s, kvh, hd = k.shape
+    if cfg.sliding_window and s > cfg.sliding_window:
+        W = cfg.sliding_window
+        # last W entries land at ring slots (pos % W)
+        kw, vw = k[:, -W:], v[:, -W:]
+        pw = positions[:, -W:] * jnp.ones((b, 1), jnp.int32)
+        slots = pw[0] % W
+        kr = jnp.zeros_like(kw).at[:, slots].set(kw)
+        vr = jnp.zeros_like(vw).at[:, slots].set(vw)
+        pr = jnp.full((b, W), -1, jnp.int32).at[:, slots].set(pw)
+        return {"k": kr, "v": vr, "pos": pr}
+    cache = {"k": k, "v": v}
+    if cfg.sliding_window:
+        cache["pos"] = positions * jnp.ones((b, 1), jnp.int32)
+    return cache
+
+
+def empty_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    S = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    c = {"k": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.head_dim), dtype),
+         "v": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.head_dim), dtype)}
+    if cfg.sliding_window:
+        c["pos"] = jnp.full((batch, S), -1, jnp.int32)
+    return c

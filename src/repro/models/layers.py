@@ -1,0 +1,70 @@
+"""Shared neural-net layers (pure functional JAX, params = pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Init = jax.nn.initializers
+
+
+def dense_init(key, shape, scale=0.02, dtype=jnp.float32):
+    return scale * jax.random.normal(key, shape, dtype)
+
+
+def rmsnorm(x, scale, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def swiglu_mlp(params, x):
+    """SwiGLU MLP.  params: w_gate (d,ff), w_up (d,ff), w_down (ff,d)."""
+    dt = x.dtype
+    g = x @ params["w_gate"].astype(dt)
+    u = x @ params["w_up"].astype(dt)
+    return (jax.nn.silu(g) * u) @ params["w_down"].astype(dt)
+
+
+def init_mlp(key, d, ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, ff), dtype=dtype),
+        "w_up": dense_init(k2, (d, ff), dtype=dtype),
+        "w_down": dense_init(k3, (ff, d), dtype=dtype),
+    }
+
+
+# -- rotary position embeddings --------------------------------------------
+
+
+def rope_freqs(head_dim, theta):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., s, h, hd); positions: broadcastable to (..., s)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    sin = jnp.sin(angles)[..., None, :]  # (..., s, 1, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def causal_lm_loss(logits, tokens, mask=None):
+    """Next-token cross-entropy.  logits: (b, s, V) predicts tokens[:, 1:]."""
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(tgt, dtype=jnp.float32)
+    else:
+        mask = mask[:, 1:].astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,237 @@
+"""Top-level model assembly: init, train/prefill/decode forwards, and
+abstract input specs for the dry-run.
+
+All functions are pure; the same code path serves the 10 assigned
+architectures (dense / MoE / SSM / hybrid / VLM / audio enc-dec) driven by
+:class:`repro.configs.base.ArchConfig`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, blocks
+from repro.models.layers import causal_lm_loss, dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    d, V = cfg.d_model, cfg.vocab
+    p = {"embed": dense_init(ks[0], (V, d), dtype=dtype),
+         "final_norm": jnp.zeros((d,), dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(ks[1], (d, V), dtype=dtype)
+    if cfg.is_encoder_decoder:
+        assert blocks.group_size(cfg) == 1, "enc-dec assumes uniform layers"
+        enc_cfg = cfg
+        enc_keys = jax.random.split(ks[2], cfg.n_enc_layers)
+        p["encoder"] = jax.vmap(
+            lambda k: blocks.init_group(k, enc_cfg, dtype=dtype))(enc_keys)
+        p["enc_norm"] = jnp.zeros((d,), dtype)
+        dec_keys = jax.random.split(ks[3], cfg.n_layers)
+        p["groups"] = jax.vmap(
+            lambda k: blocks.init_group(k, cfg, cross=True, dtype=dtype))(
+                dec_keys)
+    else:
+        p["groups"] = blocks.init_stacked_groups(ks[2], cfg, dtype=dtype)
+    return p
+
+
+def abstract_params(cfg, dtype=jnp.float32):
+    """Parameter ShapeDtypeStructs without allocating (for the dry-run)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg, dtype=dtype),
+        jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params, tokens, cfg, compute_dtype):
+    return params["embed"].astype(compute_dtype)[tokens]
+
+
+def unembed(params, x, cfg):
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return x @ w.astype(x.dtype)
+
+
+def _assemble_inputs(params, batch, cfg, compute_dtype):
+    """Token/frontend fusion -> (x, loss_mask, tokens_for_loss)."""
+    if cfg.frontend == "vision":
+        text = batch["tokens"]  # (b, s_text)
+        patches = batch["patch_embeds"].astype(compute_dtype)  # (b, nf, d)
+        xt = embed_tokens(params, text, cfg, compute_dtype)
+        x = jnp.concatenate([patches, xt], axis=1)
+        b, nf = patches.shape[:2]
+        pad = jnp.zeros((b, nf), dtype=text.dtype)
+        tokens_full = jnp.concatenate([pad, text], axis=1)
+        mask = jnp.concatenate([jnp.zeros((b, nf), bool),
+                                jnp.ones_like(text, bool)], axis=1)
+        return x, mask, tokens_full
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg, compute_dtype)
+    return x, jnp.ones_like(tokens, bool), tokens
+
+
+# ---------------------------------------------------------------------------
+# encoder (enc-dec archs)
+# ---------------------------------------------------------------------------
+
+
+def encode(params, frame_embeds, cfg, *, remat=False, unroll=False):
+    x = frame_embeds
+    x, _ = blocks.run_backbone(params["encoder"], x, cfg, mode="train",
+                               causal=False, remat=remat, unroll=unroll)
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def cross_kv_stack(params, enc_out, cfg):
+    """Precompute cross-attention K/V for every decoder layer (stacked)."""
+    def one(gp):
+        cp = gp[0]["cross"]
+        b, s, _ = enc_out.shape
+        kvh, hd = cfg.n_kv_heads, cfg.head_dim
+        dt = enc_out.dtype
+        k = (enc_out @ cp["wk"].astype(dt)).reshape(b, s, kvh, hd)
+        v = (enc_out @ cp["wv"].astype(dt)).reshape(b, s, kvh, hd)
+        return (k, v)
+    return jax.vmap(one, in_axes=(0,))(params["groups"])
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params, batch, cfg, *, compute_dtype=jnp.bfloat16,
+                  remat=True, unroll=False):
+    """Returns scalar LM loss for one batch."""
+    pc = params
+    if cfg.is_encoder_decoder:
+        enc_out = encode(pc, batch["frame_embeds"].astype(compute_dtype),
+                         cfg, remat=remat, unroll=unroll)
+        ckv = cross_kv_stack(pc, enc_out, cfg)
+        tgt = batch["tgt_tokens"]
+        x = embed_tokens(pc, tgt, cfg, compute_dtype)
+        x, _ = blocks.run_backbone(pc["groups"], x, cfg, mode="train",
+                                   cross_kv_stack=ckv, remat=remat,
+                                   unroll=unroll)
+        x = rmsnorm(x, pc["final_norm"], cfg.norm_eps)
+        logits = unembed(pc, x, cfg)
+        return causal_lm_loss(logits, tgt)
+    x, mask, tokens = _assemble_inputs(pc, batch, cfg, compute_dtype)
+    x, _ = blocks.run_backbone(pc["groups"], x, cfg, mode="train",
+                               remat=remat, unroll=unroll)
+    x = rmsnorm(x, pc["final_norm"], cfg.norm_eps)
+    logits = unembed(pc, x, cfg)
+    return causal_lm_loss(logits, tokens, mask=mask)
+
+
+def forward_prefill(params, batch, cfg, *, compute_dtype=jnp.bfloat16,
+                    unroll=False):
+    """Prefill: consume the prompt, return (last_logits, decode_state)."""
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, batch["frame_embeds"].astype(compute_dtype),
+                         cfg, unroll=unroll)
+        ckv = cross_kv_stack(params, enc_out, cfg)
+        tgt = batch["tgt_tokens"]
+        x = embed_tokens(params, tgt, cfg, compute_dtype)
+        x, caches = _prefill_backbone(params, x, cfg, cross_kv_stack_=ckv,
+                                      unroll=unroll)
+        state = {"caches": caches, "cross": ckv,
+                 "index": jnp.int32(tgt.shape[1])}
+    else:
+        x, _, _ = _assemble_inputs(params, batch, cfg, compute_dtype)
+        x, caches = _prefill_backbone(params, x, cfg, unroll=unroll)
+        state = {"caches": caches, "index": jnp.int32(x.shape[1])}
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    return logits, state
+
+
+def _prefill_backbone(params, x, cfg, cross_kv_stack_=None, unroll=False):
+    ng = (cfg.n_layers // blocks.group_size(cfg))
+    b, s = x.shape[:2]
+    proto = blocks.empty_group_cache(cfg, b, s)
+    caches = jax.tree.map(
+        lambda l: jnp.zeros((ng,) + l.shape, l.dtype), proto)
+    x, new_caches = blocks.run_backbone(
+        params["groups"], x, cfg, mode="prefill", caches=caches,
+        cross_kv_stack=cross_kv_stack_, unroll=unroll)
+    return x, new_caches
+
+
+def forward_decode(params, tokens, state, cfg, *,
+                   compute_dtype=jnp.bfloat16, unroll=False):
+    """One decode step.  tokens: (b, 1).  Returns (logits, new_state)."""
+    x = embed_tokens(params, tokens, cfg, compute_dtype)
+    ckv = state.get("cross")
+    x, new_caches = blocks.run_backbone(
+        params["groups"], x, cfg, mode="decode", caches=state["caches"],
+        cache_index=state["index"], cross_kv_stack=ckv, unroll=unroll)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    new_state = dict(state, caches=new_caches, index=state["index"] + 1)
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs for the dry-run (ShapeDtypeStruct only, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg, shape, *, compute_dtype=jnp.bfloat16):
+    """Abstract model inputs for an (arch, shape) cell.
+
+    train/prefill -> {"batch": ...}; decode -> {"tokens", "state"}.
+    Shapes follow the assignment: decode shapes are one new token against a
+    KV cache of ``seq_len``; [audio]/[vlm] frontends provide precomputed
+    embeddings.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    i32 = jnp.int32
+    if shape.mode in ("train", "prefill"):
+        if cfg.is_encoder_decoder:
+            tgt = max(64, s // 8)
+            batch = {"frame_embeds": sds((b, s, d), compute_dtype),
+                     "tgt_tokens": sds((b, tgt), i32)}
+        elif cfg.frontend == "vision":
+            nf = cfg.n_frontend_tokens
+            batch = {"tokens": sds((b, s - nf), i32),
+                     "patch_embeds": sds((b, nf, d), compute_dtype)}
+        else:
+            batch = {"tokens": sds((b, s), i32)}
+        return {"batch": batch}
+    # decode: one token against a cache of length s
+    state = abstract_decode_state(cfg, b, s, compute_dtype)
+    return {"tokens": sds((b, 1), i32), "state": state}
+
+
+def abstract_decode_state(cfg, b, s, compute_dtype=jnp.bfloat16):
+    ng = cfg.n_layers // blocks.group_size(cfg)
+    proto = jax.eval_shape(
+        lambda: blocks.empty_group_cache(cfg, b, s, jnp.bfloat16))
+    caches = jax.tree.map(
+        lambda l: sds((ng,) + l.shape, l.dtype), proto)
+    state = {"caches": caches, "index": sds((), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        kvh, hd = cfg.n_kv_heads, cfg.head_dim
+        state["cross"] = (sds((ng, b, s, kvh, hd), compute_dtype),
+                          sds((ng, b, s, kvh, hd), compute_dtype))
+    return state

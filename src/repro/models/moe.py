@@ -1,0 +1,133 @@
+"""Mixture-of-Experts MLP with capacity-based scatter dispatch.
+
+Dispatch is the scatter/gather formulation (not the (T, E, C) one-hot
+einsum, whose dispatch tensor would be ~10^11 elements at 1M tokens):
+
+  1. top-k routing per token;
+  2. position-in-expert via a cumulative sum over the (T*k, E) one-hot;
+  3. tokens scatter into an (E, C, d) expert buffer (over-capacity tokens
+     drop, weights renormalised);
+  4. batched expert SwiGLU einsum — under pjit the expert axis shards on
+     the ``model`` mesh axis (expert parallelism), and the scatter/gather
+     lowers to the all-to-all exchange of a classic EP implementation;
+  5. gather back + combine with router weights.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+# §Perf hillclimb lever: position-in-expert via associative_scan
+# (O(T log T)) instead of cumsum's reduce-window (O(T^2) in XLA's cost
+# model).  Toggled by the dry-run's --moe-scan flag for A/B.
+DISPATCH_SCAN = False
+
+# §Perf hillclimb lever 2 (granite cell, iter 2): number of dispatch
+# groups.  0 = one global dispatch (scatter crosses data shards; SPMD
+# lowers it to a replicate+all-reduce of the full expert buffer).  With
+# G == data-axis size and a P(("pod","data")) constraint on the group
+# dim, routing/scatter/expert-compute are fully LOCAL to each data shard
+# (experts replicated over data, TP over model) — zero token exchange.
+# Capacity becomes per-group, as in Switch-Transformer's group-wise
+# dispatch.
+DISPATCH_GROUPS = 0
+GROUP_AXES = ("data",)  # mesh axes the group dim is sharded over
+MESH = None             # set by the dry-run for explicit NamedSharding
+
+
+def init_moe(key, cfg, moe, dtype=jnp.float32):
+    d, ff, E = cfg.d_model, cfg.d_ff, moe.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, E), dtype=dtype),
+        "w_gate": dense_init(ks[1], (E, d, ff), dtype=dtype),
+        "w_up": dense_init(ks[2], (E, d, ff), dtype=dtype),
+        "w_down": dense_init(ks[3], (E, ff, d), dtype=dtype),
+    }
+
+
+def capacity(n_tokens: int, moe) -> int:
+    c = int(-(-n_tokens * moe.top_k * moe.capacity_factor // moe.n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly layout
+
+
+def moe_mlp(params, x, moe, *, return_aux=False):
+    """x: (..., d) -> (..., d).  Internally flattens to (T, d)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    x = x.reshape(-1, d)
+    T = x.shape[0]
+    if DISPATCH_GROUPS and T % DISPATCH_GROUPS == 0 and \
+            T // DISPATCH_GROUPS >= moe.n_experts:
+        G = DISPATCH_GROUPS
+        xg = x.reshape(G, T // G, d)
+        P = jax.sharding.PartitionSpec
+        spec = P(GROUP_AXES if len(GROUP_AXES) > 1 else GROUP_AXES[0],
+                 None, None)
+        if MESH is not None:
+            xg = jax.lax.with_sharding_constraint(
+                xg, jax.sharding.NamedSharding(MESH, spec))
+        out = jax.vmap(lambda xs: _moe_mlp_flat(params, xs, moe))(xg)
+        if MESH is not None:
+            out = jax.lax.with_sharding_constraint(
+                out, jax.sharding.NamedSharding(MESH, spec))
+        return out.reshape(orig_shape)
+    out = _moe_mlp_flat(params, x, moe, return_aux=return_aux)
+    if return_aux:
+        return out[0].reshape(orig_shape), out[1]
+    return out.reshape(orig_shape)
+
+
+def _moe_mlp_flat(params, x, moe, *, return_aux=False):
+    T, d = x.shape
+    E, k = moe.n_experts, moe.top_k
+    C = capacity(T, moe)
+    dt = x.dtype
+
+    router_logits = (x.astype(jnp.float32)
+                     @ params["router"].astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # --- dispatch: position of each (token, choice) within its expert -----
+    eid = idx.reshape(-1)  # (T*k,)
+    oh = jax.nn.one_hot(eid, E, dtype=jnp.int32)  # (T*k, E)
+    if DISPATCH_SCAN:
+        # log-depth prefix sum: jnp.cumsum lowers to a reduce-window that
+        # XLA's cost model (and some backends) treat as O(T^2); the
+        # associative_scan form is O(T log T) ops — at 8M slot-tokens this
+        # is the difference between the MoE layer being compute-
+        # pathological and free (EXPERIMENTS.md §Perf, granite hillclimb)
+        pos_all = jax.lax.associative_scan(jnp.add, oh, axis=0)
+    else:  # paper-faithful-baseline dispatch (pre-hillclimb)
+        pos_all = jnp.cumsum(oh, axis=0)
+    pos = jnp.take_along_axis(pos_all - 1, eid[:, None], axis=1)[:, 0]
+    keep = pos < C
+    dst = jnp.where(keep, eid * C + pos, E * C)  # drop slot at the end
+
+    x_rep = jnp.repeat(x, k, axis=0)  # (T*k, d) token i -> rows i*k..i*k+k-1
+    buf = jnp.zeros((E * C + 1, d), dt).at[dst].set(x_rep)
+    eb = buf[: E * C].reshape(E, C, d)
+
+    # --- expert computation (batched einsum; shards on expert axis) ------
+    g = jnp.einsum("ecd,edf->ecf", eb, params["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", eb, params["w_up"].astype(dt))
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                   params["w_down"].astype(dt))
+
+    # --- combine ----------------------------------------------------------
+    y_flat = jnp.concatenate([y.reshape(E * C, d),
+                              jnp.zeros((1, d), dt)], axis=0)
+    y_tok = y_flat[dst]  # (T*k, d); dropped rows read zeros
+    w = (gate.reshape(-1) * keep.astype(jnp.float32)).astype(dt)
+    out = (y_tok * w[:, None]).reshape(T, k, d).sum(axis=1)
+    if return_aux:
+        # load-balancing loss (Switch): E * sum_e f_e * p_e
+        me = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=(0, 1))
+        pe = jnp.mean(probs, axis=0)
+        aux = E * jnp.sum(me * pe)
+        return out, aux
+    return out

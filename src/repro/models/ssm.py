@@ -1,0 +1,215 @@
+"""Mamba-2 (SSD — state-space duality) block, TPU-native matmul form.
+
+The chunked SSD algorithm expresses the selective scan as block matmuls
+(MXU-friendly) plus a short ``lax.scan`` over chunk boundary states, which
+is the TPU adaptation of the paper's GPU kernel: intra-chunk work is dense
+einsum, inter-chunk work is an O(seq/chunk) recurrence.
+
+Shapes: x (b, l, d); internally d_inner = expand*d, heads nh = d_inner/hp,
+state n = d_state, groups g (B/C shared per group, heads split g*hg = nh).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm
+
+NEG_INF = -1e30
+
+
+def init_ssm(key, cfg, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    nh = di // s.head_dim
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 5)
+    A = jax.random.uniform(ks[2], (nh,), jnp.float32, 1.0, 16.0)
+    dt = jnp.exp(jax.random.uniform(ks[3], (nh,), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * s.n_groups * s.d_state
+                                      + nh), dtype=dtype),
+        "conv_w": dense_init(ks[1], (s.conv_width, conv_dim), scale=0.1,
+                             dtype=dtype),
+        "A_log": jnp.log(A).astype(dtype),
+        "D": jnp.ones((nh,), dtype),
+        "dt_bias": dt_bias.astype(dtype),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[4], (di, d), dtype=dtype),
+    }
+
+
+def _segsum(x):
+    """x: (..., T) -> (..., T, T); out[i, j] = sum_{j < k <= i} x[k]."""
+    cs = jnp.cumsum(x, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    T = x.shape[-1]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, ss, NEG_INF)
+
+
+def _split(params, x, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    gn = s.n_groups * s.d_state
+    nh = di // s.head_dim
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * gn], axis=-1)
+    return z, xBC, dt, di, gn, nh
+
+
+def ssd_chunked(x, dt, A, B, C, chunk, initial_state=None):
+    """Chunked SSD scan.
+
+    x: (b, l, g, hg, p) [dt-weighted NOT applied yet]; dt: (b, l, h);
+    A: (h,) negative reals; B, C: (b, l, g, n).
+    Returns y (b, l, g, hg, p) and final state (b, g, hg, p, n).
+    """
+    b, l, g, hg, p = x.shape
+    n = B.shape[-1]
+    h = g * hg
+    cl = min(chunk, l)
+    nc = l // cl
+    assert l % cl == 0, f"seq {l} not divisible by chunk {cl}"
+
+    xc = x.reshape(b, nc, cl, g, hg, p)
+    dtc = dt.reshape(b, nc, cl, g, hg)
+    Bc = B.reshape(b, nc, cl, g, n)
+    Cc = C.reshape(b, nc, cl, g, n)
+    dA = dtc * A.reshape(g, hg)  # (b,nc,cl,g,hg)
+    dA_cs = jnp.cumsum(dA, axis=2)
+    xdt = xc * dtc[..., None]
+
+    # 1) intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, 2, -1)))  # (b,nc,g,hg,cl,cl)
+    scores = jnp.einsum("bclgn,bcsgn->bcgls", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    att = scores[:, :, :, None] * L  # (b,nc,g,hg,cl,cl)
+    y = jnp.einsum("bcghls,bcsghp->bclghp", att, xdt,
+                   preferred_element_type=jnp.float32)
+
+    # 2) per-chunk contribution to boundary states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :, :] - dA_cs)  # (b,nc,cl,g,hg)
+    states = jnp.einsum("bcsgn,bcsgh,bcsghp->bcghpn", Bc, decay_states, xdt,
+                        preferred_element_type=jnp.float32)
+
+    # 3) inter-chunk recurrence over boundary states
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :, :])  # (b,nc,g,hg)
+    s0 = jnp.zeros((b, g, hg, p, n), jnp.float32) if initial_state is None \
+        else initial_state.astype(jnp.float32)
+
+    def step(S, inp):
+        dec, st = inp
+        S_new = S * dec[..., None, None] + st
+        return S_new, S  # emit the *previous* state for this chunk
+
+    xs = (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0))
+    final_state, prev_states = jax.lax.scan(step, s0, xs)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,nc,g,hg,p,n)
+
+    # 4) contribution of the carried-in state to each position
+    out_decay = jnp.exp(dA_cs)  # (b,nc,cl,g,hg)
+    y_off = jnp.einsum("bclgn,bcghpn,bclgh->bclghp", Cc, prev_states,
+                       out_decay, preferred_element_type=jnp.float32)
+    y = (y + y_off).reshape(b, l, g, hg, p)
+    return y, final_state
+
+
+def _causal_conv(xBC, w):
+    """Depthwise causal conv, width cw.  xBC: (b, l, c); w: (cw, c)."""
+    cw = w.shape[0]
+    out = jnp.zeros_like(xBC)
+    for i in range(cw):  # cw == 4: unrolled shifts beat conv_general here
+        shift = cw - 1 - i
+        xs = jnp.pad(xBC, ((0, 0), (shift, 0), (0, 0)))[:, :xBC.shape[1]]
+        out = out + xs * w[i].astype(xBC.dtype)
+    return out
+
+
+def ssm_forward(params, x, cfg, *, mode, cache=None):
+    """Mamba-2 block.  x: (b, l, d) -> (b, l, d).  Returns (y, new_cache).
+
+    cache (decode): {"conv": (b, cw-1, conv_dim), "state": (b,g,hg,p,n)}.
+    """
+    s = cfg.ssm
+    b, l, d = x.shape
+    dt_ = x.dtype
+    z, xBC, dt, di, gn, nh = _split(params, x, cfg)
+    g, hp = s.n_groups, s.head_dim
+    hg = nh // g
+    n = s.d_state
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+
+    if mode == "decode":
+        window = jnp.concatenate([cache["conv"].astype(dt_), xBC], axis=1)
+        conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                              params["conv_w"].astype(jnp.float32))
+        xBC_t = jax.nn.silu(conv_out).astype(dt_)  # (b, conv_dim)
+        xs, B, C = jnp.split(xBC_t, [di, di + gn], axis=-1)
+        xh = xs.reshape(b, g, hg, hp)
+        B = B.reshape(b, g, n)
+        C = C.reshape(b, g, n)
+        dt1 = dt[:, 0].reshape(b, g, hg)
+        dA = jnp.exp(dt1 * A.reshape(g, hg))  # (b,g,hg)
+        S = cache["state"].astype(jnp.float32)
+        S = S * dA[..., None, None] + jnp.einsum(
+            "bghp,bgn,bgh->bghpn", xh.astype(jnp.float32), B, dt1)
+        y = jnp.einsum("bghpn,bgn->bghp", S, C)
+        y = y + xh.astype(jnp.float32) * params["D"].astype(
+            jnp.float32).reshape(g, hg)[..., None]
+        y = y.reshape(b, 1, di).astype(dt_)
+        new_cache = {"conv": window[:, 1:].astype(cache["conv"].dtype),
+                     "state": S.astype(cache["state"].dtype)}
+    else:
+        xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"]))
+        # pad seq to a chunk multiple; padded steps get dt=0 (no decay, no
+        # contribution) so the final state is exact
+        cl = min(s.chunk, l)
+        lp = -(-l // cl) * cl
+        if lp != l:
+            xBC = jnp.pad(xBC, ((0, 0), (0, lp - l), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, lp - l), (0, 0)))
+            dt = dt * (jnp.arange(lp) < l)[None, :, None]
+        xs, B, C = jnp.split(xBC, [di, di + gn], axis=-1)
+        xh = xs.reshape(b, lp, g, hg, hp)
+        B = B.reshape(b, lp, g, n).astype(jnp.float32)
+        C = C.reshape(b, lp, g, n).astype(jnp.float32)
+        dth = dt.reshape(b, lp, g, hg)
+        y, final = ssd_chunked(xh.astype(jnp.float32), dth, A, B, C, s.chunk)
+        y = y[:, :l] + xh.astype(jnp.float32)[:, :l] * params["D"].astype(
+            jnp.float32).reshape(g, hg)[..., None]
+        y = y.reshape(b, l, di).astype(dt_)
+        new_cache = None
+        if mode == "prefill":
+            conv_tail = _prefill_conv_tail(params, x, cfg)
+            new_cache = {"conv": conv_tail.astype(jnp.bfloat16),
+                         "state": final.astype(jnp.bfloat16)}
+
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"].astype(dt_), new_cache
+
+
+def _prefill_conv_tail(params, x, cfg):
+    """Last cw-1 pre-conv activations, for seeding the decode conv cache."""
+    s = cfg.ssm
+    z, xBC, dt, di, gn, nh = _split(params, x, cfg)
+    return xBC[:, -(s.conv_width - 1):]
+
+
+def empty_ssm_cache(cfg, batch, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    g = s.n_groups
+    conv_dim = di + 2 * g * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, g, nh // g, s.head_dim, s.d_state), dtype),
+    }

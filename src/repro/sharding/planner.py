@@ -1,0 +1,261 @@
+"""Shape-aware sharding planner.
+
+Maps every tensor in (params, optimizer state, batch, decode state) to a
+``PartitionSpec`` for a given mesh, with divisibility-checked fallbacks:
+
+* **TP** — weight matrices shard their head/ff/vocab-sized dim on ``model``.
+* **DP** — batch dims shard on ``(pod, data)`` when divisible.
+* **FSDP** — for models whose fp32 master would not fit replicated on the
+  data axis, weights additionally shard a d_model-sized dim on the data
+  axes (ZeRO-3 style; pjit inserts the per-group all-gathers inside the
+  layer scan).
+* **ZeRO-1** — optimizer moments always shard on the data axes when the
+  corresponding weight does not.
+* Decode caches shard batch on data, kv-heads (or head_dim) on ``model``.
+
+Everything degrades to replication when a dim is not divisible — the
+dry-run must compile for every (arch × shape × mesh) cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    mesh: Mesh
+    data_axes: tuple      # e.g. ("pod", "data") or ("data",)
+    model_axis: str       # "model"
+    fsdp: bool            # shard weights on data axes too
+    n_micro: int          # gradient-accumulation microbatches (train)
+    # §Perf hillclimb levers (serving):
+    cache_seq_model: bool = False   # shard decode KV-cache seq on model
+    decode_batch_shard: bool = True  # shard decode tokens batch on data
+
+    @property
+    def data_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.data_axes]))
+
+    @property
+    def model_size(self) -> int:
+        return int(self.mesh.shape[self.model_axis])
+
+    @property
+    def n_chips(self) -> int:
+        return self.data_size * self.model_size
+
+
+def make_plan(cfg, shape, mesh, *, act_budget_bytes=1.0e9,
+              param_budget_bytes=2.0e9, n_micro=None, fsdp=None,
+              cache_seq_model=False, decode_batch_shard=True) -> MeshPlan:
+    axes = tuple(mesh.axis_names)
+    data_axes = tuple(a for a in axes if a != "model")
+    model_axis = "model"
+    msize = int(mesh.shape[model_axis])
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+    n_chips = msize * dsize
+
+    total_params = cfg.param_counts()["total"]
+    if fsdp is None:
+        fsdp = (total_params * 4 / msize) > param_budget_bytes
+
+    if n_micro is None:
+        n_micro = 1
+        if shape.mode == "train":
+            ng = cfg.n_layers
+            carry_bytes = ng * shape.tokens * cfg.d_model * 2  # bf16 residuals
+            while (carry_bytes / n_micro / n_chips > act_budget_bytes
+                   and n_micro < shape.global_batch
+                   and shape.global_batch % (n_micro * 2) == 0):
+                n_micro *= 2
+    return MeshPlan(mesh=mesh, data_axes=data_axes, model_axis=model_axis,
+                    fsdp=fsdp, n_micro=n_micro,
+                    cache_seq_model=cache_seq_model,
+                    decode_batch_shard=decode_batch_shard)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _div(n, k):
+    return k > 0 and n % k == 0
+
+
+def _shard_dim(spec_list, dim, size, axes, mesh):
+    """Try to assign ``axes`` (tuple) to dim if divisible; returns bool."""
+    ax_prod = int(np.prod([mesh.shape[a] for a in axes]))
+    if _div(size, ax_prod) and spec_list[dim] is None:
+        spec_list[dim] = axes if len(axes) > 1 else axes[0]
+        return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg, abstract, plan: MeshPlan):
+    """PartitionSpec pytree matching ``abstract`` (from lm.abstract_params).
+
+    Rule selection is by tree path (parameter name) + shape divisibility.
+    """
+    mesh = plan.mesh
+    m = plan.model_axis
+    d_axes = plan.data_axes
+
+    def spec_for(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", None)) or str(p)
+                 for p in path]
+        name = names[-1]
+        stacked = any(n in ("groups", "encoder") for n in names)
+        nd = len(leaf.shape)
+        off = 1 if stacked else 0  # leading layer-stack axis never sharded
+        s = [None] * nd
+
+        def dims():
+            return leaf.shape[off:]
+
+        if name in ("ln1", "ln2", "ln_cross", "final_norm", "enc_norm",
+                    "norm", "A_log", "D", "dt_bias"):
+            pass  # replicate small vectors
+        elif name == "embed":
+            _shard_dim(s, 0, leaf.shape[0], (m,), mesh)
+            if plan.fsdp:
+                _shard_dim(s, 1, leaf.shape[1], d_axes, mesh)
+        elif name == "head":
+            _shard_dim(s, 1, leaf.shape[1], (m,), mesh)
+            if plan.fsdp:
+                _shard_dim(s, 0, leaf.shape[0], d_axes, mesh)
+        elif name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj"):
+            if nd - off == 3:  # MoE expert-stacked (E, d, ff)
+                if not _shard_dim(s, off, leaf.shape[off], (m,), mesh):
+                    _shard_dim(s, off + 2, leaf.shape[off + 2], (m,), mesh)
+                if plan.fsdp:
+                    _shard_dim(s, off + 1, leaf.shape[off + 1], d_axes, mesh)
+            else:
+                _shard_dim(s, off + 1, leaf.shape[off + 1], (m,), mesh)
+                if plan.fsdp:
+                    _shard_dim(s, off, leaf.shape[off], d_axes, mesh)
+        elif name in ("wo", "w_down", "out_proj"):
+            if nd - off == 3:  # (E, ff, d)
+                if not _shard_dim(s, off, leaf.shape[off], (m,), mesh):
+                    _shard_dim(s, off + 1, leaf.shape[off + 1], (m,), mesh)
+                if plan.fsdp:
+                    _shard_dim(s, off + 2, leaf.shape[off + 2], d_axes, mesh)
+            else:
+                _shard_dim(s, off, leaf.shape[off], (m,), mesh)
+                if plan.fsdp:
+                    _shard_dim(s, off + 1, leaf.shape[off + 1], d_axes, mesh)
+        elif name == "router":
+            pass  # replicate (d, E): small, read by every token
+        elif name == "conv_w":
+            _shard_dim(s, off + 1, leaf.shape[off + 1], (m,), mesh)
+        else:
+            pass
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract)
+
+
+def opt_specs(cfg, abstract_params, plan: MeshPlan):
+    """Adam moments: like params, plus ZeRO-1 data-sharding when possible."""
+    pspecs = param_specs(cfg, abstract_params, plan)
+    mesh = plan.mesh
+
+    def zero1(leaf, spec):
+        s = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        used = []
+        for e in s:
+            if isinstance(e, tuple):
+                used.extend(e)
+            elif e is not None:
+                used.append(e)
+        if any(a in used for a in plan.data_axes):
+            return P(*s)  # already data-sharded (FSDP)
+        # shard the largest unsharded dim over the data axes
+        order = sorted(range(len(leaf.shape)), key=lambda i: -leaf.shape[i])
+        for i in order:
+            if s[i] is None and _shard_dim(s, i, leaf.shape[i],
+                                           plan.data_axes, mesh):
+                break
+        return P(*s)
+
+    return jax.tree_util.tree_map(zero1, abstract_params, pspecs)
+
+
+# ---------------------------------------------------------------------------
+# batch / activation / decode-state specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg, shape, plan: MeshPlan, batch_abstract):
+    """Input batch: shard the leading batch dim over the data axes."""
+    mesh = plan.mesh
+
+    def spec_for(leaf):
+        s = [None] * len(leaf.shape)
+        _shard_dim(s, 0, leaf.shape[0], plan.data_axes, mesh)
+        return P(*s)
+
+    return jax.tree.map(spec_for, batch_abstract)
+
+
+def decode_state_specs(cfg, plan: MeshPlan, state_abstract):
+    """Decode caches: (ng, b, S, kvh, hd) and SSM states."""
+    mesh = plan.mesh
+    m = plan.model_axis
+
+    def spec_for(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", None)) or str(p)
+                 for p in path]
+        name = names[-1] if names else ""
+        nd = len(leaf.shape)
+        s = [None] * nd
+        if nd == 0:
+            return P()
+        if name == "pos":  # (ng, b, S)
+            if plan.decode_batch_shard:
+                _shard_dim(s, 1, leaf.shape[1], plan.data_axes, mesh)
+            if plan.cache_seq_model:
+                _shard_dim(s, 2, leaf.shape[2], (m,), mesh)
+            return P(*s)
+        if name in ("k", "v") or (nd == 5 and name not in ("state",)):
+            # (ng, b, S, kvh, hd) attn cache or cross-kv tuple leaf
+            if plan.decode_batch_shard:
+                _shard_dim(s, 1, leaf.shape[1], plan.data_axes, mesh)
+            if plan.cache_seq_model:
+                # flash-decode style: split the cache length over model;
+                # softmax max/sum become tiny cross-shard reductions
+                _shard_dim(s, 2, leaf.shape[2], (m,), mesh)
+            elif not _shard_dim(s, 3, leaf.shape[3], (m,), mesh):
+                _shard_dim(s, 4, leaf.shape[4], (m,), mesh)
+            return P(*s)
+        if name == "state":  # (ng, b, g, hg, p, n)
+            if plan.decode_batch_shard:
+                _shard_dim(s, 1, leaf.shape[1], plan.data_axes, mesh)
+            _shard_dim(s, 3, leaf.shape[3], (m,), mesh)
+            return P(*s)
+        if name == "conv":  # (ng, b, cw-1, conv_dim)
+            if plan.decode_batch_shard:
+                _shard_dim(s, 1, leaf.shape[1], plan.data_axes, mesh)
+            _shard_dim(s, 3, leaf.shape[3], (m,), mesh)
+            return P(*s)
+        if nd >= 2:
+            _shard_dim(s, 1 if nd > 2 else 0, leaf.shape[1 if nd > 2 else 0],
+                       plan.data_axes, mesh)
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec_for, state_abstract)
+
+
+def to_shardings(specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

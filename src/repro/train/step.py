@@ -1,0 +1,70 @@
+"""Train / prefill / decode step functions, microbatched and shardable.
+
+``make_train_step`` builds the jit-able function the launcher and dry-run
+lower: gradient accumulation over microbatches (lax.scan), remat inside
+each microbatch, global-norm clipping and AdamW — all expressed so GSPMD
+can place the grad reduce-scatter/all-gather for the ZeRO/FSDP shardings
+from the planner.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.train import optimizer as opt_lib
+
+
+def make_train_step(cfg, opt_cfg, *, n_micro=1, compute_dtype=jnp.bfloat16,
+                    grad_compress=False, remat=True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics)."""
+
+    def loss_fn(params, mb):
+        return lm.forward_train(params, mb, cfg, compute_dtype=compute_dtype,
+                                remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+            acc_dtype = jnp.bfloat16 if grad_compress else jnp.float32
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype),
+                              params)
+
+            def body(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dtype), g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0), g0), mbs)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: (g / n_micro).astype(jnp.float32),
+                                 grads)
+        params, opt_state, metrics = opt_lib.adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, *, compute_dtype=jnp.bfloat16):
+    def prefill_step(params, batch):
+        return lm.forward_prefill(params, batch, cfg,
+                                  compute_dtype=compute_dtype)
+    return prefill_step
+
+
+def make_decode_step(cfg, *, compute_dtype=jnp.bfloat16):
+    def decode_step(params, tokens, state):
+        return lm.forward_decode(params, tokens, state, cfg,
+                                 compute_dtype=compute_dtype)
+    return decode_step

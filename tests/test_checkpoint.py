@@ -1,0 +1,102 @@
+"""Checkpoint/restore: atomicity, async save, retention, torn-checkpoint
+rejection, and elastic restore; plus a crash-restart integration test of
+the train loop (subprocess hard-kill at a step boundary)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ck
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": ({"w": jnp.ones((5,), jnp.bfloat16)},
+                  {"w": jnp.zeros((2, 2), jnp.int32)})}
+
+
+def assert_tree_equal(x, y):
+    for a, b in zip(jax.tree.leaves(x), jax.tree.leaves(y)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = tree()
+    ck.save(tmp_path, 7, t)
+    assert ck.latest_step(tmp_path) == 7
+    out = ck.restore(tmp_path, 7, jax.eval_shape(lambda: t))
+    assert_tree_equal(t, out)
+
+
+def test_torn_checkpoint_is_ignored(tmp_path):
+    t = tree()
+    ck.save(tmp_path, 1, t)
+    ck.save(tmp_path, 2, t)
+    # simulate a crash mid-save: remove COMMIT from step 2
+    (tmp_path / "step_00000002" / "COMMIT").unlink()
+    assert ck.latest_step(tmp_path) == 1
+    with pytest.raises(FileNotFoundError):
+        ck.restore(tmp_path, 2, jax.eval_shape(lambda: t))
+
+
+def test_retention_gc(tmp_path):
+    t = tree()
+    for s in range(6):
+        ck.save(tmp_path, s, t, keep=2)
+    assert ck.valid_steps(tmp_path) == [4, 5]
+
+
+def test_async_checkpointer(tmp_path):
+    t = tree()
+    acp = ck.AsyncCheckpointer(tmp_path, keep=2)
+    acp.save(1, t)
+    acp.save(2, t)  # waits for 1
+    acp.wait()
+    assert ck.latest_step(tmp_path) == 2
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    ck.save(tmp_path, 1, {"a": jnp.zeros((3,))})
+    with pytest.raises(ValueError):
+        ck.restore(tmp_path, 1, {"a": jax.ShapeDtypeStruct((4,),
+                                                           jnp.float32)})
+
+
+def test_elastic_restore_onto_new_sharding(tmp_path):
+    """Restore lays out against the CURRENT mesh (elastic rescale)."""
+    t = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ck.save(tmp_path, 3, t)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    sh = {"w": jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("data", None))}
+    out = ck.restore(tmp_path, 3, jax.eval_shape(lambda: t), shardings=sh)
+    assert out["w"].sharding.is_equivalent_to(sh["w"], 2)
+    assert_tree_equal(t, out)
+
+
+@pytest.mark.slow
+def test_crash_restart_resumes_training(tmp_path):
+    """Hard-kill the trainer at step 6, restart, verify it resumes from
+    the checkpoint (not from scratch) and completes."""
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    args = [sys.executable, "-m", "repro.launch.train",
+            "--arch", "smollm-360m", "--reduced", "--steps", "10",
+            "--batch", "2", "--seq", "32", "--ckpt-dir", str(tmp_path),
+            "--ckpt-every", "5"]
+    p1 = subprocess.run(args + ["--simulate-failure", "6"], env=env,
+                        capture_output=True, text=True, timeout=600)
+    assert p1.returncode == 42, p1.stderr[-2000:]
+    assert ck.latest_step(tmp_path) == 5  # step-5 checkpoint survived
+    p2 = subprocess.run(args, env=env, capture_output=True, text=True,
+                        timeout=600)
+    assert p2.returncode == 0, p2.stderr[-2000:]
+    assert "resumed from step 5" in p2.stdout

