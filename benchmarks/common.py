@@ -34,6 +34,28 @@ def trained_tiles():
                   for p in EXTRACTOR_DIR.glob("tile*_params.pkl"))
 
 
+def load_or_init_extractor(tile: int):
+    """(params, cfg, trained) — the trained artifact when present, else a
+    freshly initialised extractor.  Throughput benchmarks only need the
+    compute graph, not a converged model, so a fresh checkout can still
+    run fig6/fig7/fig8 end-to-end (accuracy tables DO require training —
+    they stay artifact-gated)."""
+    for t in (tile, *trained_tiles()):
+        loaded = load_extractor(t)
+        if loaded is not None:
+            return loaded[0], loaded[1], True
+    import jax
+    from repro.core.extractor import init_encoder, init_extractor
+    from repro.core.train_extractor import ExtractorTrainConfig
+    cfg = ExtractorTrainConfig(tile=tile)
+    n_bits = cfg.code.codeword_bits
+    params = {"dec": init_extractor(jax.random.key(0), n_bits=n_bits,
+                                    tile=tile),
+              "enc": init_encoder(jax.random.key(1), n_bits=n_bits,
+                                  tile=tile)}
+    return params, cfg, False
+
+
 def timeit(fn, *args, iters=3, warmup=1):
     import jax
     for _ in range(warmup):

@@ -1,5 +1,8 @@
-"""Paper Fig. 6: end-to-end detection throughput vs batch size, QRMark
-pipeline vs the sequential Stable-Signature-style baseline.
+"""Paper Fig. 6: end-to-end detection throughput vs batch size —
+sequential Stable-Signature-style baseline vs naive tiling vs the full
+QRMark pipeline, all executed through the multi-lane stage-graph
+executor (``repro.core.lanes``), with the per-mode lane assignment
+reported alongside throughput.
 
 This container has one CPU device, so absolute numbers are CPU-bound;
 the claim being reproduced is the RELATIVE speedup curve (the paper's
@@ -18,6 +21,13 @@ IMG = 128
 RAW = 160
 TILE = 32
 
+# (mode, rs_mode, interleave, fused, lanes arg for run_stream)
+MODES = (
+    ("sequential", "cpu_sync", False, False, 1),
+    ("tiled", "cpu_sync", False, True, 1),
+    ("qrmark", "device", True, True, None),   # None -> default lane split
+)
+
 
 def _pipe(mode, rs_mode, params, cfg_train, interleave=True, fused=True,
           tile=TILE):
@@ -28,37 +38,42 @@ def _pipe(mode, rs_mode, params, cfg_train, interleave=True, fused=True,
     return DetectionPipeline(cfg, params["dec"])
 
 
-def run_stream(pipe, batch, n_batches):
+def run_stream(pipe, batch, n_batches, lanes=None):
     data = [np.stack([synth_image(k * batch + i, RAW)
                       for i in range(batch)]) for k in range(n_batches)]
-    r = pipe.run_stream(data)
-    return r["throughput_ips"]
+    r = pipe.run_stream(data, lanes=lanes)
+    return r["throughput_ips"], r.get("lanes", {})
 
 
 def main(quick: bool = False):
-    loaded = common.load_extractor(TILE) or common.load_extractor(16)
-    if loaded is None:
-        print("fig6: no trained extractor available", flush=True)
-        return []
-    params, tcfg = loaded
+    params, tcfg, trained = common.load_or_init_extractor(TILE)
+    if not trained:
+        print("fig6: no trained extractor — using an untrained one "
+              "(throughput only)", flush=True)
     tile = tcfg.tile
     n_batches = 2 if quick else 4
     batches = BATCHES[:3] if quick else BATCHES
     rows = []
     for b in batches:
-        base = _pipe("sequential", "cpu_sync", params, tcfg,
-                     interleave=False, fused=False, tile=tile)
-        t_base = run_stream(base, b, n_batches)
-        qr = _pipe("qrmark", "device", params, tcfg, tile=tile)
-        t_qr = run_stream(qr, b, n_batches)
-        qr.close(); base.close()
-        row = {"batch": b, "baseline_ips": round(t_base, 1),
-               "qrmark_ips": round(t_qr, 1),
-               "speedup": round(t_qr / t_base, 2) if t_base else None}
-        rows.append(row)
-        common.emit(f"fig6/batch{b}", 1.0 / max(t_qr, 1e-9),
-                    f"qrmark={t_qr:.1f}ips;base={t_base:.1f}ips;"
-                    f"speedup={row['speedup']}")
+        ips = {}
+        for mode, rs_mode, inter, fused, lanes in MODES:
+            p = _pipe(mode, rs_mode, params, tcfg, interleave=inter,
+                      fused=fused, tile=tile)
+            t, lane_map = run_stream(p, b, n_batches, lanes=lanes)
+            p.close()
+            ips[mode] = t
+            rows.append({"batch": b, "mode": mode,
+                         "lanes": sum(lane_map.values()),
+                         "lane_map": lane_map, "ips": round(t, 1),
+                         "speedup": None})
+        for row in rows[-len(MODES):]:
+            row["speedup"] = (round(row["ips"] / ips["sequential"], 2)
+                              if ips["sequential"] else None)
+        common.emit(
+            f"fig6/batch{b}", 1.0 / max(ips["qrmark"], 1e-9),
+            f"qrmark={ips['qrmark']:.1f}ips;tiled={ips['tiled']:.1f}ips;"
+            f"base={ips['sequential']:.1f}ips;"
+            f"speedup={ips['qrmark'] / max(ips['sequential'], 1e-9):.2f}")
     common.save_json("fig6_throughput", rows)
     return rows
 

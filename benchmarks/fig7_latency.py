@@ -23,11 +23,10 @@ def batch_latency(pipe, batch, iters=3):
 
 
 def main(quick: bool = False):
-    loaded = common.load_extractor(TILE) or common.load_extractor(16)
-    if loaded is None:
-        print("fig7: no trained extractor available", flush=True)
-        return []
-    params, tcfg = loaded
+    params, tcfg, trained = common.load_or_init_extractor(TILE)
+    if not trained:
+        print("fig7: no trained extractor — using an untrained one "
+              "(latency only)", flush=True)
     batches = BATCHES[:3] if quick else BATCHES
     rows = []
     for b in batches:

@@ -2,8 +2,12 @@
 QRMark component over the sequential baseline:
 
   baseline -> +LB (large batch) -> +T+F (tiling + kernel fusion) ->
-  +CPU (RS thread pool + codebook) -> +Allocation (adaptive lanes,
-  interleaving, on-device RS).
+  +CPU (RS thread pool + codebook) -> +Allocation (adaptive multi-lane
+  execution, interleaving, on-device RS).
+
+Every configuration runs through the stage-graph lane executor; the
+final step is the one that actually turns the allocator's stream
+vector into concurrent lanes.
 """
 from __future__ import annotations
 
@@ -14,11 +18,10 @@ from benchmarks.fig6_throughput import IMG, RAW, _pipe, run_stream
 
 
 def main(quick: bool = False):
-    tiles = common.trained_tiles()
-    if not tiles:
-        print("fig8: no trained extractor available", flush=True)
-        return []
-    params, tcfg = common.load_extractor(32 if 32 in tiles else tiles[0])
+    params, tcfg, trained = common.load_or_init_extractor(32)
+    if not trained:
+        print("fig8: no trained extractor — using an untrained one "
+              "(throughput only)", flush=True)
     tile = tcfg.tile
     nb = 2 if quick else 4
     b_small, b_large = (16, 64) if quick else (16, 128)
@@ -27,30 +30,37 @@ def main(quick: bool = False):
     # 1. sequential baseline at small batch
     p = _pipe("sequential", "cpu_sync", params, tcfg, interleave=False,
               fused=False, tile=tile)
-    base = run_stream(p, b_small, nb); p.close()
-    stages.append(("baseline", base))
+    base, lm = run_stream(p, b_small, nb, lanes=1); p.close()
+    stages.append(("baseline", base, lm))
     # 2. +LB: same pipeline, large batch
     p = _pipe("sequential", "cpu_sync", params, tcfg, interleave=False,
               fused=False, tile=tile)
-    stages.append(("+LB", run_stream(p, b_large, nb))); p.close()
+    ips, lm = run_stream(p, b_large, nb, lanes=1); p.close()
+    stages.append(("+LB", ips, lm))
     # 3. +T+F: tiling + fused preprocess kernel
     p = _pipe("tiled", "cpu_sync", params, tcfg, interleave=False,
               fused=True, tile=tile)
-    stages.append(("+T+F", run_stream(p, b_large, nb))); p.close()
+    ips, lm = run_stream(p, b_large, nb, lanes=1); p.close()
+    stages.append(("+T+F", ips, lm))
     # 4. +CPU: RS correction thread pool + codebook
     p = _pipe("tiled", "cpu_pool", params, tcfg, interleave=False,
               fused=True, tile=tile)
-    stages.append(("+CPU", run_stream(p, b_large, nb))); p.close()
-    # 5. +Allocation: full qrmark (lanes, interleave, on-device RS)
+    ips, lm = run_stream(p, b_large, nb, lanes=1); p.close()
+    stages.append(("+CPU", ips, lm))
+    # 5. +Allocation: full qrmark — multi-lane executor, interleave,
+    # on-device RS (lanes=None -> the pipeline's default lane split)
     p = _pipe("qrmark", "device", params, tcfg, tile=tile)
-    stages.append(("+Allocation", run_stream(p, b_large, nb))); p.close()
+    ips, lm = run_stream(p, b_large, nb, lanes=None); p.close()
+    stages.append(("+Allocation", ips, lm))
 
     rows = []
-    for name, ips in stages:
+    for name, ips, lane_map in stages:
         rows.append({"config": name, "ips": round(ips, 1),
+                     "lanes": sum(lane_map.values()),
                      "speedup": round(ips / base, 2)})
         common.emit(f"fig8/{name}", 1.0 / max(ips, 1e-9),
-                    f"ips={ips:.1f};speedup={ips / base:.2f}x")
+                    f"ips={ips:.1f};speedup={ips / base:.2f}x;"
+                    f"lanes={sum(lane_map.values())}")
     common.save_json("fig8_breakdown", rows)
     return rows
 

@@ -127,6 +127,18 @@ def adaptive_allocation(profiles: Sequence[StageProfile], *, global_batch: int,
     return Allocation(s, m, J(s, m), history)
 
 
+def assign(profiles: Sequence[StageProfile], *, global_batch: int,
+           lane_budget: int = 8, mem_cap: float = 16e9
+           ) -> Dict[str, int]:
+    """{stage name: lane count} for the lane executor — Algorithm 1's
+    stream vector keyed by stage so :class:`repro.core.lanes.Stage`
+    assignments can be looked up by name."""
+    alloc = adaptive_allocation(profiles, global_batch=global_batch,
+                                stream_budget=lane_budget, mem_cap=mem_cap)
+    return {p.name: max(1, int(s))
+            for p, s in zip(profiles, alloc.streams)}
+
+
 # ---------------------------------------------------------------------------
 # warm-up profiling (Step 1 of the paper's algorithm)
 # ---------------------------------------------------------------------------

@@ -1,7 +1,8 @@
-"""End-to-end watermark detection pipeline (QRMark §5.1).
+"""End-to-end watermark detection pipeline (QRMark §5.1) as an explicit
+stage graph.
 
-Stages: preprocess (load/transform) -> tiling -> decode (extractor) ->
-RS correction.  Three pipeline modes:
+Stages: ingest (host->device + fused preprocess) -> tiled decode
+(extractor) -> RS correction.  Three pipeline modes:
 
 * ``sequential``  — Stable-Signature-style baseline: unfused preprocess,
   full-image decode, synchronous CPU RS per batch.
@@ -11,24 +12,41 @@ RS correction.  Three pipeline modes:
   LPT mini-batch scheduling, inter-batch interleaving, async RS
   (CPU thread pool w/ codebook, or fully on-device batched RS).
 
+Execution engines, all driving the same jitted stage functions:
+
+* :meth:`DetectionPipeline.detect_batch` — one batch, synchronous (plus
+  a fully-fused single-jit fast path for qrmark + device RS);
+* :meth:`DetectionPipeline.run_stream` — a stream of batches through the
+  :class:`repro.core.lanes.LaneExecutor`: N lanes per stage (from the
+  §6.2 allocator), bounded queues, multiple mini-batches in flight;
+* :meth:`DetectionPipeline.run_batch` — data-parallel sharding of one
+  (possibly ragged) batch across all local devices via a 1-D
+  ``NamedSharding`` mesh.
+
+RNG discipline: batch k uses ``fold_in(key(seed), k)`` and image i of a
+batch uses ``fold_in(batch_key, i)``, so results are bit-identical
+regardless of lane count, execution order, batch padding, or sharding.
+
 The pipeline object is the unit the benchmarks (Fig. 6/7/8) drive.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Iterable, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import allocator, interleave, losses, scheduler, tiling, \
-    transforms
+from repro.core import interleave, lanes as lanes_lib, tiling, transforms
 from repro.core.extractor import extractor_forward
 from repro.core.rs.codec import DEFAULT_CODE, RSCode, rs_decode
 from repro.core.rs import jax_rs
-from repro.core.rs.cpu_pool import RSCodebook, RSCorrectionPool
+from repro.core.rs.cpu_pool import RSCorrectionPool
+
+STAGE_NAMES = ("ingest", "decode", "rs")
 
 
 @dataclasses.dataclass
@@ -48,7 +66,7 @@ class DetectionConfig:
 
 
 class DetectionPipeline:
-    """Drives (preprocess -> tile -> decode -> RS) over image streams."""
+    """Drives (ingest -> tile+decode -> RS) over image streams."""
 
     def __init__(self, cfg: DetectionConfig, extractor_params,
                  ground_truth_bits: Optional[np.ndarray] = None):
@@ -56,17 +74,31 @@ class DetectionPipeline:
         self.params = extractor_params
         self.gt = ground_truth_bits
         self.code = cfg.code
-        self._key = jax.random.key(cfg.seed)
+        self._base_key = jax.random.key(cfg.seed)
         self._rs_pool: Optional[RSCorrectionPool] = None
         self._device_rs = None
-        self._seq = 0
+        self._seq = 0                 # batch counter (keys)
+        self._pool_seq = 0            # RS-pool job id counter
+        self._pool_lock = threading.Lock()
+        self._stats_lock = threading.Lock()  # _finish runs on rs lanes
         self.stats: Dict[str, float] = {"batches": 0, "images": 0}
         self._build()
 
     # ------------------------------------------------------------------
+    def _batch_key(self, seq: int):
+        return jax.random.fold_in(self._base_key, seq)
+
+    @staticmethod
+    def _image_keys(batch_key, b: int):
+        return jax.vmap(lambda i: jax.random.fold_in(batch_key, i))(
+            jnp.arange(b))
+
     def _build(self):
         cfg = self.cfg
-        tile = cfg.tile if cfg.mode != "sequential" else cfg.img_size
+        if cfg.mode not in ("sequential", "tiled", "qrmark"):
+            raise ValueError(f"unknown pipeline mode {cfg.mode!r}")
+        if cfg.rs_mode not in ("device", "cpu_pool", "cpu_sync"):
+            raise ValueError(f"unknown rs_mode {cfg.rs_mode!r}")
 
         if cfg.fused_preprocess and cfg.mode == "qrmark":
             from repro.kernels import ops as kops
@@ -78,12 +110,13 @@ class DetectionPipeline:
                 lambda raw: transforms.preprocess_reference(
                     raw, resize=cfg.resize_src, crop=cfg.img_size))
 
-        def decode_stage(images, key):
+        def decode_stage(images, batch_key):
             if cfg.mode == "sequential":
                 tiles = images  # full-image decode
             else:
-                tiles, _ = tiling.select_tiles(cfg.strategy, key, images,
-                                               cfg.tile)
+                keys = self._image_keys(batch_key, images.shape[0])
+                tiles, _ = tiling.select_tiles_per_image(
+                    cfg.strategy, keys, images, cfg.tile)
             return extractor_forward(self.params, tiles)
 
         self._decode = jax.jit(decode_stage)
@@ -98,10 +131,11 @@ class DetectionPipeline:
         if cfg.mode == "qrmark" and cfg.rs_mode == "device":
             dev_decoder = jax_rs.make_decoder(self.code)
 
-            def fused(raw, key):
+            def fused(raw, batch_key):
                 x = self._preprocess_fn_inline(raw)
-                tiles, _ = tiling.select_tiles(cfg.strategy, key, x,
-                                               cfg.tile)
+                keys = self._image_keys(batch_key, x.shape[0])
+                tiles, _ = tiling.select_tiles_per_image(
+                    cfg.strategy, keys, x, cfg.tile)
                 logits = extractor_forward(self.params, tiles)
                 bits = (logits > 0).astype(jnp.int32)
                 return jax.vmap(dev_decoder)(bits), logits
@@ -119,42 +153,45 @@ class DetectionPipeline:
         return transforms.preprocess_reference(raw, resize=cfg.resize_src,
                                                crop=cfg.img_size)
 
-    def _next_key(self):
-        self._key, k = jax.random.split(self._key)
-        return k
-
-    # ------------------------------------------------------------------
-    def detect_batch(self, raw_batch) -> Dict[str, np.ndarray]:
-        """Synchronous detection of one raw uint8 image batch."""
+    # -- RS correction, host-side engines ------------------------------
+    def _rs_host(self, bits: np.ndarray):
+        """(msg, ok, ncorr) via the configured host RS engine."""
         cfg = self.cfg
-        b = raw_batch.shape[0]
-        if self._fused is not None:
-            (rs_out, logits) = self._fused(raw_batch, self._next_key())
-            msg = np.asarray(rs_out["message_bits"])
-            ok = np.asarray(rs_out["ok"])
-            ncorr = np.asarray(rs_out["n_corrected"])
-        else:
-            x = self._preprocess(raw_batch)
-            logits = self._decode(x, self._next_key())
-            bits = np.asarray((logits > 0).astype(jnp.int32))
-            msg = np.zeros((b, self.code.message_bits), np.int32)
-            ok = np.zeros((b,), bool)
-            ncorr = np.zeros((b,), np.int32)
-            if cfg.rs_mode == "cpu_pool":
-                base = self._seq
-                self._seq += b
-                self._rs_pool.submit_batch(bits, base)
-                for i, (mi, oki) in enumerate(
-                        self._rs_pool.drain(range(base, base + b))):
-                    msg[i], ok[i] = mi[: self.code.message_bits], oki
-            else:  # cpu_sync
-                for i in range(b):
-                    res = rs_decode(self.code, bits[i])
-                    msg[i] = res.message_bits
-                    ok[i] = res.ok
-                    ncorr[i] = res.n_corrected
-        self.stats["batches"] += 1
-        self.stats["images"] += b
+        b = bits.shape[0]
+        msg = np.zeros((b, self.code.message_bits), np.int32)
+        ok = np.zeros((b,), bool)
+        ncorr = np.zeros((b,), np.int32)
+        if cfg.rs_mode == "cpu_pool":
+            with self._pool_lock:
+                base = self._pool_seq
+                self._pool_seq += b
+            self._rs_pool.submit_batch(bits, base)
+            for i, (mi, oki) in enumerate(
+                    self._rs_pool.drain(range(base, base + b))):
+                msg[i], ok[i] = mi[: self.code.message_bits], oki
+        else:  # cpu_sync
+            for i in range(b):
+                res = rs_decode(self.code, bits[i])
+                msg[i] = res.message_bits
+                ok[i] = res.ok
+                ncorr[i] = res.n_corrected
+        return msg, ok, ncorr
+
+    def _rs_correct(self, bits):
+        """(msg, ok, ncorr) via the configured RS engine — device batch
+        decoder or one of the host paths.  ``bits`` may be a device or
+        numpy int array of shape (b, codeword_bits)."""
+        if self.cfg.rs_mode == "device":
+            rs_out = self._device_rs(jnp.asarray(bits))
+            return (np.asarray(rs_out["message_bits"]),
+                    np.asarray(rs_out["ok"]),
+                    np.asarray(rs_out["n_corrected"]))
+        return self._rs_host(np.asarray(bits))
+
+    def _finish(self, msg, ok, ncorr, logits, b) -> Dict[str, np.ndarray]:
+        with self._stats_lock:
+            self.stats["batches"] += 1
+            self.stats["images"] += b
         out = {"message_bits": msg, "ok": ok, "n_corrected": ncorr,
                "logits": np.asarray(logits)}
         if self.gt is not None:
@@ -163,23 +200,152 @@ class DetectionPipeline:
         return out
 
     # ------------------------------------------------------------------
-    def run_stream(self, batches, *, scheduled: bool = True) -> dict:
-        """Detect a stream of batches; returns throughput metrics."""
+    def detect_batch(self, raw_batch, *, key=None) -> Dict[str, np.ndarray]:
+        """Synchronous detection of one raw uint8 image batch."""
         cfg = self.cfg
-        it = interleave.interleaved(
-            batches, prepare=None, enabled=(cfg.interleave
-                                            and cfg.mode == "qrmark"))
+        b = raw_batch.shape[0]
+        if key is None:
+            key = self._batch_key(self._seq)
+            self._seq += 1
+        if self._fused is not None:
+            (rs_out, logits) = self._fused(raw_batch, key)
+            msg = np.asarray(rs_out["message_bits"])
+            ok = np.asarray(rs_out["ok"])
+            ncorr = np.asarray(rs_out["n_corrected"])
+        else:
+            x = self._preprocess(raw_batch)
+            logits = self._decode(x, key)
+            bits = np.asarray((logits > 0).astype(jnp.int32))
+            msg, ok, ncorr = self._rs_correct(bits)
+        return self._finish(msg, ok, ncorr, logits, b)
+
+    # -- stage graph ----------------------------------------------------
+    def default_lanes(self) -> Dict[str, int]:
+        """Static lane split within ``cfg.lane_budget`` (Algorithm 1's
+        warm-start: the decode stage is the GPU-intensive one and gets
+        the most lanes; use ``allocator.assign`` for the profiled
+        allocation)."""
+        cfg = self.cfg
+        if cfg.mode != "qrmark":
+            return {n: 1 for n in STAGE_NAMES}
+        budget = max(3, cfg.lane_budget)
+        decode = min(4, max(1, budget // 2))
+        rs = min(4, max(1, budget - decode - 1))
+        return {"ingest": 1, "decode": decode, "rs": rs}
+
+    def build_stages(self, lanes: Optional[Dict[str, int]] = None
+                     ) -> List[lanes_lib.Stage]:
+        """The detection stage graph for the lane executor.
+
+        Payloads are dicts carrying ``raw`` -> ``x`` -> ``logits`` ->
+        result; ``key`` is pre-derived by the feeder so stage functions
+        are pure and any lane count is bit-identical to serial."""
+        cfg = self.cfg
+        ln = {**self.default_lanes(), **(lanes or {})}
+        depth = 2 if cfg.interleave else 1
+
+        def st_ingest(p):
+            p["x"] = self._preprocess(jax.device_put(p["raw"]))
+            return p
+
+        def st_decode(p):
+            p["logits"] = self._decode(p["x"], p["key"])
+            return p
+
+        def st_rs(p):
+            logits = p["logits"]
+            bits = np.asarray((logits > 0).astype(jnp.int32))
+            msg, ok, ncorr = self._rs_correct(bits)
+            return self._finish(msg, ok, ncorr, logits, logits.shape[0])
+
+        return [
+            lanes_lib.Stage("ingest", st_ingest, lanes=ln["ingest"],
+                            depth=depth),
+            lanes_lib.Stage("decode", st_decode, lanes=ln["decode"],
+                            depth=depth, gpu_intensive=True),
+            lanes_lib.Stage("rs", st_rs, lanes=ln["rs"], depth=depth),
+        ]
+
+    # ------------------------------------------------------------------
+    def run_stream(self, batches: Iterable, *, scheduled: bool = True,
+                   lanes: Union[None, int, Dict[str, int]] = None) -> dict:
+        """Detect a stream of batches; returns throughput metrics.
+
+        ``lanes``: None -> lane executor with :meth:`default_lanes` for
+        qrmark (plain prefetch loop otherwise); int n -> n decode + n RS
+        lanes; dict -> explicit per-stage lane counts."""
+        cfg = self.cfg
+        use_exec = lanes is not None or cfg.mode == "qrmark"
+        if isinstance(lanes, int):
+            lanes = {"ingest": 1, "decode": max(1, lanes),
+                     "rs": max(1, lanes)}
         n_img = 0
-        t0 = time.perf_counter()
         results = []
-        for raw in it:
-            results.append(self.detect_batch(raw))
-            n_img += raw.shape[0]
-        # drain async RS
+        t0 = time.perf_counter()
+        if use_exec:
+            stages = self.build_stages(lanes)
+            ex = lanes_lib.LaneExecutor(stages, name="detect")
+            seq0 = self._seq
+
+            def feed():
+                for i, raw in enumerate(batches):
+                    yield {"raw": raw, "key": self._batch_key(seq0 + i),
+                           "seq": seq0 + i}
+
+            for r in ex.run(feed()):
+                results.append(r)
+                n_img += r["logits"].shape[0]
+            self._seq = seq0 + len(results)
+            lane_map = {s.name: s.lanes for s in stages}
+        else:
+            it = interleave.interleaved(
+                batches, prepare=None,
+                enabled=(cfg.interleave and cfg.mode == "qrmark"))
+            for raw in it:
+                results.append(self.detect_batch(raw))
+                n_img += raw.shape[0]
+            lane_map = {n: 1 for n in STAGE_NAMES}
         wall = time.perf_counter() - t0
         return {"images": n_img, "wall_s": wall,
                 "throughput_ips": n_img / wall if wall > 0 else 0.0,
-                "results": results}
+                "lanes": lane_map, "results": results}
+
+    # ------------------------------------------------------------------
+    def run_batch(self, raw_batch, *, mesh=None,
+                  key=None) -> Dict[str, np.ndarray]:
+        """One (possibly ragged) batch, data-parallel across devices.
+
+        The batch is padded up to the mesh's data-axis size, sharded
+        with a ``NamedSharding`` over the 1-D device mesh, pushed
+        through the staged (non-fused) jitted functions, and sliced
+        back to the true batch size.  Per-image RNG keys make the pad
+        rows inert: every real image's result is bit-identical to the
+        single-device staged path."""
+        from repro.launch import mesh as mesh_lib
+        from repro.sharding import planner
+
+        if key is None:
+            key = self._batch_key(self._seq)
+            self._seq += 1
+        b = raw_batch.shape[0]
+        if mesh is None:
+            mesh = mesh_lib.make_detection_mesh()
+        ndev = mesh.devices.size
+        pad = (-b) % ndev
+        raw_np = np.asarray(raw_batch)
+        if pad:
+            raw_np = np.concatenate(
+                [raw_np, np.repeat(raw_np[-1:], pad, axis=0)])
+        x_in = planner.shard_detection_batch(mesh, raw_np)
+        x = self._preprocess(x_in)
+        logits = self._decode(x, key)
+        bits = (logits > 0).astype(jnp.int32)
+        if self.cfg.rs_mode == "device":
+            # decode the padded batch (shape-stable jit), slice after
+            msg, ok, ncorr = (a[:b] for a in self._rs_correct(bits))
+        else:
+            msg, ok, ncorr = self._rs_correct(np.asarray(bits)[:b])
+        return self._finish(msg, ok, ncorr, np.asarray(logits)[:b], b)
 
     def close(self):
         if self._rs_pool is not None:

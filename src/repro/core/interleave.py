@@ -4,16 +4,19 @@ Each input batch B_k splits into a host *preparation region* P_k (decode /
 layout / device placement) and a device *kernel region* K_k.  While the
 device runs K_k, a background thread prepares P_{k+1}; JAX's async
 dispatch then overlaps the host->device transfer and kernel execution.
-Implemented as a bounded-queue prefetcher usable by both the detection
-pipeline and the LM training input pipeline.
+
+``PrefetchIterator`` is the single-stage special case of the N-lane
+stage-graph executor in :mod:`repro.core.lanes` — one "prepare" stage,
+one lane, a depth-deep bounded queue — kept as the convenience wrapper
+both the detection pipeline and the LM training input pipeline use.
 """
 from __future__ import annotations
 
-import queue
-import threading
 from typing import Callable, Iterable, Iterator, Optional
 
 import jax
+
+from repro.core.lanes import LaneExecutor, Stage
 
 
 class PrefetchIterator:
@@ -21,37 +24,26 @@ class PrefetchIterator:
 
     def __init__(self, it: Iterable, prepare: Optional[Callable] = None,
                  depth: int = 2, device_put: bool = True):
-        self._it = iter(it)
-        self._prepare = prepare or (lambda x: x)
-        self._device_put = device_put
-        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
-        self._done = object()
-        self._err: Optional[BaseException] = None
-        self._thread = threading.Thread(target=self._worker, daemon=True)
-        self._thread.start()
+        prep = prepare or (lambda x: x)
 
-    def _worker(self):
-        try:
-            for item in self._it:
-                out = self._prepare(item)
-                if self._device_put:
-                    out = jax.device_put(out)
-                self._q.put(out)
-        except BaseException as e:  # surface in consumer
-            self._err = e
-        finally:
-            self._q.put(self._done)
+        def fn(item):
+            out = prep(item)
+            if device_put:
+                out = jax.device_put(out)
+            return out
+
+        self._ex = LaneExecutor(
+            [Stage("prefetch", fn, lanes=1, depth=depth)], name="prefetch")
+        self._gen = self._ex.run(it)
 
     def __iter__(self) -> Iterator:
         return self
 
     def __next__(self):
-        item = self._q.get()
-        if item is self._done:
-            if self._err is not None:
-                raise self._err
-            raise StopIteration
-        return item
+        return next(self._gen)
+
+    def close(self):
+        self._ex.close()
 
 
 def interleaved(it, prepare=None, depth: int = 2, enabled: bool = True):

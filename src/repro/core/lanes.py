@@ -1,0 +1,210 @@
+"""Multi-lane horizontal-fusion executor (QRMark §6.2, system layer).
+
+The paper's resource-aware multi-channel horizontal fusion assigns more
+CUDA streams to GPU-intensive pipeline stages.  The host-side analogue
+implemented here is an explicit *stage graph*: each detection stage
+(ingest/preprocess, tiled decode, RS correction) is a :class:`Stage`
+with a declared resource profile, and :class:`LaneExecutor` runs the
+allocator's lane assignment as real concurrency — ``lanes[k]`` worker
+threads per stage k, connected by bounded queues, with multiple
+mini-batches in flight per stage.  Stage functions that dispatch jitted
+JAX computations return *futures* (async dispatch), so a downstream
+stage enqueues device work while upstream lanes keep feeding — the
+N-lane generalisation of the 2-deep ``PrefetchIterator`` this module
+replaces (``interleave.PrefetchIterator`` is now a single-stage
+``LaneExecutor``).
+
+Correctness contract: results come out in *input order* regardless of
+lane count, and stage functions are pure w.r.t. their payload (all RNG
+keys are pre-derived from the item's sequence number), so any lane
+configuration is bit-identical to serial execution of the same stage
+functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, \
+    Sequence
+
+
+@dataclasses.dataclass
+class Stage:
+    """One node of the detection stage graph.
+
+    ``fn`` maps payload -> payload.  ``lanes`` is the number of worker
+    threads (concurrent mini-batches in flight for this stage); ``depth``
+    bounds the stage's input queue.  ``gpu_intensive`` records the
+    resource profile the allocator uses to decide who gets extra lanes
+    (Algorithm 1 gives device-bound stages more streams, host-bound
+    stages fewer)."""
+    name: str
+    fn: Callable[[Any], Any]
+    lanes: int = 1
+    depth: int = 2
+    gpu_intensive: bool = False
+    profile: Optional[object] = None   # allocator.StageProfile when known
+
+    def __post_init__(self):
+        if self.lanes < 1:
+            raise ValueError(f"stage {self.name!r}: lanes must be >= 1")
+        if self.depth < 1:
+            raise ValueError(f"stage {self.name!r}: depth must be >= 1")
+
+
+class _Failure:
+    """Error marker that flows through the graph in place of a payload so
+    ordering never stalls; re-raised at the consumer in sequence order."""
+
+    def __init__(self, err: BaseException):
+        self.err = err
+
+
+_DONE = object()
+
+
+class LaneExecutor:
+    """Runs a linear stage graph over a stream of items.
+
+    * one input queue per stage, ``maxsize = stage.depth`` — bounded
+      buffering is what overlaps the stages without unbounded memory;
+    * ``stage.lanes`` daemon worker threads per stage — horizontal
+      fusion: several mini-batches of the *same* stage in flight;
+    * a reorder buffer at the sink restores input order, so lane count
+      never changes observable results.
+    """
+
+    def __init__(self, stages: Sequence[Stage], name: str = "pipeline"):
+        if not stages:
+            raise ValueError("LaneExecutor needs at least one stage")
+        self.stages = list(stages)
+        self.name = name
+        self._cancel = threading.Event()
+        self._used = False
+
+    # -- cooperative queue ops so close() can unstick blocked workers ----
+    def _put(self, q: "queue.Queue", item) -> bool:
+        while not self._cancel.is_set():
+            try:
+                q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _get(self, q: "queue.Queue"):
+        while not self._cancel.is_set():
+            try:
+                return q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+        return _DONE
+
+    def close(self):
+        """Cancel in-flight work (workers drain and exit)."""
+        self._cancel.set()
+
+    # ------------------------------------------------------------------
+    def run(self, items: Iterable) -> Iterator:
+        """Pump ``items`` through the graph; yields results in order.
+
+        Single-use: the sink cancels all workers when the stream ends,
+        so a second ``run()`` needs a fresh executor."""
+        if self._used:
+            raise RuntimeError(
+                f"{self.name}: LaneExecutor.run() is single-use — "
+                "construct a new executor for another stream")
+        self._used = True
+        qs = [queue.Queue(maxsize=s.depth) for s in self.stages]
+        # the sink queue is bounded too: a slow consumer must exert
+        # backpressure on the whole graph, not buffer the entire stream
+        out_q: "queue.Queue" = queue.Queue(maxsize=self.stages[-1].depth)
+
+        def feeder():
+            seq = 0
+            try:
+                for item in items:
+                    if not self._put(qs[0], (seq, item)):
+                        return
+                    seq += 1
+            except BaseException as e:  # source iterator failed: the
+                # error takes the next sequence slot so every item fed
+                # before it still comes out first
+                self._put(qs[0], (seq, _Failure(e)))
+            finally:
+                self._put(qs[0], _DONE)
+
+        def worker(idx: int, stage: Stage, done_box: dict):
+            in_q = qs[idx]
+            nxt = qs[idx + 1] if idx + 1 < len(qs) else out_q
+            while True:
+                got = self._get(in_q)
+                if got is _DONE:
+                    with done_box["lock"]:
+                        done_box["n"] += 1
+                        last = done_box["n"] >= stage.lanes
+                    # siblings each need to see the sentinel once; the
+                    # last lane forwards it downstream instead
+                    self._put(nxt if last else in_q, _DONE)
+                    return
+                seq, payload = got
+                if isinstance(payload, _Failure):
+                    self._put(nxt, (seq, payload))
+                    continue
+                try:
+                    payload = stage.fn(payload)
+                except BaseException as e:
+                    payload = _Failure(e)
+                self._put(nxt, (seq, payload))
+
+        threads = [threading.Thread(target=feeder, daemon=True,
+                                    name=f"{self.name}/feed")]
+        for i, st in enumerate(self.stages):
+            box = {"lock": threading.Lock(), "n": 0}
+            for lane in range(st.lanes):
+                threads.append(threading.Thread(
+                    target=worker, args=(i, st, box), daemon=True,
+                    name=f"{self.name}/{st.name}.{lane}"))
+        for t in threads:
+            t.start()
+
+        # sink: reorder buffer keyed by sequence number.  The sentinel
+        # protocol guarantees _DONE reaches out_q only after every
+        # result (each lane finishes + forwards its in-flight item
+        # before consuming the sentinel), so draining until _DONE then
+        # flushing the buffer sees every sequence number exactly once.
+        buf: Dict[int, Any] = {}
+        next_seq = 0
+        done = False
+        try:
+            while not done or buf:
+                if not done:
+                    got = self._get(out_q)
+                    if got is _DONE:
+                        done = True
+                        continue
+                    seq, payload = got
+                    buf[seq] = payload
+                while next_seq in buf:
+                    payload = buf.pop(next_seq)
+                    next_seq += 1
+                    if isinstance(payload, _Failure):
+                        raise payload.err
+                    yield payload
+                if done and buf and next_seq not in buf:
+                    raise RuntimeError(
+                        f"{self.name}: lost sequence {next_seq} "
+                        f"(have {sorted(buf)})")
+        finally:
+            self.close()
+
+    def map(self, items: Iterable) -> List:
+        """Eager form of :meth:`run`."""
+        return list(self.run(items))
+
+
+def lanes_from_allocation(stage_names: Sequence[str],
+                          streams: Sequence[int]) -> Dict[str, int]:
+    """{stage: lanes} from an ``allocator.Allocation.streams`` vector."""
+    return {n: max(1, int(s)) for n, s in zip(stage_names, streams)}

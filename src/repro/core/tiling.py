@@ -49,6 +49,43 @@ def select_tiles(strategy: str, key, images, tile: int):
     return extract_tiles(images, offs, tile), offs
 
 
+def per_image_offsets(strategy: str, keys, image_hw, tile: int):
+    """Like :func:`tile_offsets` but driven by one PRNG key per image
+    (shape ``(b,)`` key array) instead of one batch-shaped draw.
+
+    The offset for image i depends only on ``keys[i]`` — not on the
+    batch size — so padding a ragged batch or sharding it across
+    devices leaves every real image's tile choice bit-identical.  This
+    is the form the lane executor and the sharded ``run_batch`` use."""
+    H, W = image_hw
+    if strategy == "fixed":
+        b = keys.shape[0]
+        return jnp.zeros((b, 2), jnp.int32)
+    if strategy == "random":
+        def one(k):
+            ky, kx = jax.random.split(k)
+            y = jax.random.randint(ky, (), 0, H - tile + 1)
+            x = jax.random.randint(kx, (), 0, W - tile + 1)
+            return jnp.stack([y, x]).astype(jnp.int32)
+        return jax.vmap(one)(keys)
+    if strategy == "random_grid":
+        gy, gx = H // tile, W // tile
+
+        def one(k):
+            c = jax.random.randint(k, (), 0, gy * gx)
+            return (jnp.stack([(c // gx), (c % gx)]) * tile).astype(
+                jnp.int32)
+        return jax.vmap(one)(keys)
+    raise ValueError(f"unknown tiling strategy {strategy!r}")
+
+
+def select_tiles_per_image(strategy: str, keys, images, tile: int):
+    """Per-image-keyed variant of :func:`select_tiles`."""
+    _, H, W, _ = images.shape
+    offs = per_image_offsets(strategy, keys, (H, W), tile)
+    return extract_tiles(images, offs, tile), offs
+
+
 def grid_partition(images, tile: int):
     """All non-overlapping l x l tiles: (b, gy*gx, tile, tile, C)."""
     b, H, W, C = images.shape

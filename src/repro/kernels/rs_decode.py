@@ -36,11 +36,16 @@ from repro.core.rs import gf as gf_np
 
 M, N, K = 4, 15, 12
 T = (N - K) // 2  # = 1
-NQ, NN = T + 1, T + K  # Q coeffs, N coeffs
-COLS = NQ + NN  # 15 unknowns... +? system is (N rows, COLS=15) wait
-# B-W unknowns: q_0..q_t (2) + n_0..n_{t+k-1} (13) = 15 = N rows ->
-# homogeneous nullspace exists in the 15x15+1 bordered sense; we use the
-# same (N, NQ+NN) = (15, 15) matrix + first-free-column rule as jax_rs.
+NQ = T + 1        # deg(Q) <= t      -> t+1   = 2 coefficients
+NN = T + K        # deg(Nu) <= t+k-1 -> t+k   = 13 coefficients
+COLS = NQ + NN    # unknowns x = [q_0..q_t, nu_0..nu_{t+k-1}], 15 total
+# Berlekamp-Welch: the key equation R_i * Q(x_i) = Nu(x_i) at each of the
+# N = 15 evaluation points gives a HOMOGENEOUS linear system A x = 0 with
+# shape (N rows, NQ+NN = 15 unknowns).  Whenever <= t symbol errors
+# occurred, the true (Q, Nu) pair is a nonzero solution, so rank(A) < 15
+# and a nontrivial nullspace vector exists; the kernel runs masked-pivot
+# RREF and reads that vector off the first free column — the same
+# construction (and tie-breaking rule) as jax_rs, its oracle.
 
 
 def _gf16_mul(a, b):

@@ -1,8 +1,4 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST run before any jax import/init: the dry-run builds the production
-#   meshes (16x16 single-pod, 2x16x16 multi-pod) out of host placeholder
-#   devices.  Smoke tests and benchmarks do NOT import this module.
 
 """Multi-pod dry-run: lower + compile every (architecture x input-shape x
 mesh) cell, prove it fits (memory_analysis), and extract the roofline raw
@@ -155,7 +151,10 @@ def _probe_cfg(cfg, depth_groups):
 
 
 def _analyze(compiled, n_chips):
-    cost = dict(compiled.cost_analysis())
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+        cost = cost[0] if cost else {}
+    cost = dict(cost)
     coll = hlo_analysis.collective_stats(compiled.as_text())
     mem = compiled.memory_analysis()
     memd = {}
@@ -349,7 +348,25 @@ def _derive_roofline(cfg, shape, mesh, plan, rec):
 # ---------------------------------------------------------------------------
 
 
+def force_placeholder_devices(n: int = 512):
+    """The dry-run builds the production meshes (16x16 single-pod,
+    2x16x16 multi-pod) out of host placeholder devices.  MUST run before
+    jax initialises its backend — main() calls it first thing, BEFORE
+    any jax array op.  Deliberately NOT a module-level side effect:
+    importing this module (tests, tooling) must never change the device
+    topology of the importing process."""
+    import jax
+    backends = getattr(getattr(jax._src, "xla_bridge", None),
+                       "_backends", None)
+    if backends:  # backend already up: too late
+        raise RuntimeError(
+            "force_placeholder_devices must run before jax init")
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" --xla_force_host_platform_device_count={n}")
+
+
 def main():
+    force_placeholder_devices()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

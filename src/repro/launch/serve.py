@@ -2,10 +2,13 @@
 service, driven by QRMark's adaptive allocator and LPT scheduler.
 
 The detection service is the paper's deployment scenario: a stream of
-image batches -> preprocess/tile/decode/RS with lanes allocated by
-Algorithm 1 and mini-batches scheduled by Algorithm 2, straggler
-mitigation included.  The LM decode service exercises prefill/decode for
-the assigned architectures (reduced configs on CPU).
+image batches -> ingest/tile/decode/RS with lanes allocated by
+Algorithm 1 (``allocator.assign``) and executed as real concurrency by
+the :class:`repro.core.lanes.LaneExecutor`; mini-batches are scheduled
+by Algorithm 2 with straggler mitigation.  Ragged / odd-size request
+batches are padded up to a shape bucket (bounding jit recompilation)
+and sliced back — per-image RNG keys make pad rows inert, so padding
+never changes a real image's result.
 """
 from __future__ import annotations
 
@@ -13,14 +16,15 @@ import argparse
 import dataclasses
 import json
 import time
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import allocator, scheduler as sched_lib
-from repro.core.detect import DetectionConfig, DetectionPipeline
+from repro.core.detect import DetectionConfig, DetectionPipeline, \
+    STAGE_NAMES
 from repro.data import pipeline as data_lib
 
 
@@ -30,20 +34,47 @@ class ServiceReport:
     wall_s: float
     throughput_ips: float
     allocation: Optional[List[int]]
+    lanes: Optional[Dict[str, int]]
     lane_loads: Optional[List[float]]
     straggler_retries: int = 0
+
+
+def pad_to_bucket(raw: np.ndarray, bucket: int = 0) -> Tuple[np.ndarray, int]:
+    """Pad a ragged batch up to a shape bucket: the next power of two
+    when ``bucket`` is 0, else the next multiple of ``bucket``.  Returns
+    (padded batch, true size).  Bounded bucket count = bounded number of
+    jit compilations no matter what sizes clients send."""
+    b = raw.shape[0]
+    if bucket > 0:
+        target = -(-b // bucket) * bucket
+    else:
+        target = 1
+        while target < b:
+            target *= 2
+    if target == b:
+        return raw, b
+    return np.concatenate(
+        [raw, np.repeat(raw[-1:], target - b, axis=0)]), b
 
 
 class DetectionService:
     """Adaptive, scheduled detection service (QRMark online stage)."""
 
     def __init__(self, det_cfg: DetectionConfig, extractor_params, *,
-                 lane_budget: int = 8, mem_cap: float = 2e9):
+                 lane_budget: int = 8, mem_cap: float = 2e9,
+                 lanes: int = 0, pad_bucket: int = 0):
         self.pipe = DetectionPipeline(det_cfg, extractor_params)
         self.det_cfg = det_cfg
         self.lane_budget = lane_budget
         self.mem_cap = mem_cap
+        self.pad_bucket = pad_bucket
         self.allocation: Optional[allocator.Allocation] = None
+        # lanes knob: 0 = adaptive (allocator.assign after warmup),
+        # n >= 1 = fixed n decode/RS lanes, bypassing the allocator
+        self.lanes: Optional[Dict[str, int]] = (
+            None if lanes == 0 else
+            {"ingest": 1, "decode": max(1, lanes), "rs": max(1, lanes)})
+        self._fixed_lanes = lanes != 0
         self.warmup_stats: Dict[int, tuple] = {}
 
     # -- Algorithm 1: warm-up profiling + adaptive allocation -------------
@@ -51,7 +82,7 @@ class DetectionService:
         cfg = self.det_cfg
         pre = allocator.profile_stage(
             lambda b: jax.block_until_ready(self.pipe._preprocess(b)),
-            sample_raw, name="preprocess")
+            sample_raw, name="ingest")
         x = self.pipe._preprocess(sample_raw)
         key = jax.random.key(0)
         dec = allocator.profile_stage(
@@ -72,47 +103,88 @@ class DetectionService:
         self.allocation = allocator.adaptive_allocation(
             profiles, global_batch=sample_raw.shape[0],
             stream_budget=self.lane_budget, mem_cap=self.mem_cap)
+        if not self._fixed_lanes:
+            self.lanes = allocator.assign(
+                profiles, global_batch=sample_raw.shape[0],
+                lane_budget=self.lane_budget, mem_cap=self.mem_cap)
         self.warmup_stats[cfg.tile] = (dec.t_per_sample, dec.u_per_sample)
         return self.allocation
 
-    # -- Algorithm 2 + streaming ------------------------------------------
-    def serve(self, batches, *, use_scheduler: bool = True) -> ServiceReport:
+    # -- Algorithm 2 + lane-executor streaming -----------------------------
+    def serve(self, batches: Iterable, *,
+              use_scheduler: bool = True) -> ServiceReport:
+        """Run a stream of (possibly ragged) batches through the lane
+        executor.  With the scheduler on, each request batch is split
+        into LPT-placed mini-batch tasks first (Algorithm 2); the task
+        slices then flow through the executor as the work stream."""
         mon = sched_lib.StragglerMonitor()
-        n_img, retries = 0, 0
-        t0 = time.perf_counter()
+        retries = 0
+        work: List[Tuple[np.ndarray, int]] = []  # (padded slice, true b)
         for raw in batches:
+            raw = np.asarray(raw)
             b = raw.shape[0]
             if use_scheduler and self.warmup_stats:
                 tasks = sched_lib.build_tasks(
                     [{"i": i} for i in range(b)], self.warmup_stats,
                     b0=b, select_tile=lambda m: self.det_cfg.tile,
                     group=max(1, b // 4))
-                n_lanes = (sum(self.allocation.streams)
-                           if self.allocation else 4)
+                n_lanes = (sum(self.lanes.values()) if self.lanes else 4)
                 sched = sched_lib.lpt_schedule(
                     tasks, n_lanes=max(n_lanes, 1), balance_slack=0.25,
                     mem_cap=self.mem_cap, b_min=1, global_batch=b)
-                # execute lane by lane (async dispatch overlaps on device)
                 off = 0
                 for lane in sched.lanes:
                     for task in lane:
-                        mon.start(task.task_id)
                         sl = raw[off: off + task.n_samples]
                         off += task.n_samples
                         if sl.shape[0]:
-                            self.pipe.detect_batch(jnp.asarray(sl))
-                        if not mon.complete(task.task_id):
-                            retries += 1
+                            work.append(pad_to_bucket(sl, self.pad_bucket))
             else:
-                self.pipe.detect_batch(jnp.asarray(raw))
-            n_img += b
+                work.append(pad_to_bucket(raw, self.pad_bucket))
+
+        def feed():
+            for tid, (sl, _) in enumerate(work):
+                mon.start(tid)
+                yield sl
+
+        t0 = time.perf_counter()
+        out = self.pipe.run_stream(feed(), lanes=self.lanes)
         wall = time.perf_counter() - t0
+        n_img = 0
+        for tid, ((_, true_b), res) in enumerate(zip(work,
+                                                     out["results"])):
+            # slice pad rows back off every per-image field
+            for k, v in res.items():
+                if getattr(v, "ndim", 0) >= 1:
+                    res[k] = v[:true_b]
+            n_img += true_b
+            if not mon.complete(tid):
+                retries += 1
         return ServiceReport(
             images=n_img, wall_s=wall,
             throughput_ips=n_img / wall if wall else 0.0,
             allocation=(self.allocation.streams if self.allocation
                         else None),
-            lane_loads=None, straggler_retries=retries)
+            lanes=out.get("lanes"), lane_loads=None,
+            straggler_retries=retries)
+
+    # -- data-parallel sharded path ----------------------------------------
+    def serve_sharded(self, batches: Iterable) -> ServiceReport:
+        """Shard each batch across every local device (1-D data mesh)
+        instead of pipelining — the multi-chip scaling axis; combine
+        with lanes by running one service per host."""
+        from repro.launch.mesh import make_detection_mesh
+        mesh = make_detection_mesh()
+        n_img = 0
+        t0 = time.perf_counter()
+        for raw in batches:
+            out = self.pipe.run_batch(np.asarray(raw), mesh=mesh)
+            n_img += out["ok"].shape[0]
+        wall = time.perf_counter() - t0
+        return ServiceReport(
+            images=n_img, wall_s=wall,
+            throughput_ips=n_img / wall if wall else 0.0,
+            allocation=None, lanes=None, lane_loads=None)
 
 
 def main():
@@ -122,6 +194,15 @@ def main():
     ap.add_argument("--img", type=int, default=128)
     ap.add_argument("--tile", type=int, default=32)
     ap.add_argument("--mode", default="qrmark")
+    ap.add_argument("--rs-mode", default="device",
+                    choices=("device", "cpu_pool", "cpu_sync"))
+    ap.add_argument("--lanes", type=int, default=0,
+                    help="0 = adaptive (Algorithm 1); n = fixed n "
+                         "decode/RS lanes")
+    ap.add_argument("--ragged", action="store_true",
+                    help="send odd-size batches to exercise padding")
+    ap.add_argument("--sharded", action="store_true",
+                    help="data-parallel run_batch over all local devices")
     args = ap.parse_args()
 
     from repro.core.extractor import init_extractor
@@ -130,17 +211,22 @@ def main():
                             n_bits=DEFAULT_CODE.codeword_bits)
     cfg = DetectionConfig(tile=args.tile, img_size=args.img,
                           resize_src=args.img + args.img // 8,
-                          mode=args.mode)
-    svc = DetectionService(cfg, params)
+                          mode=args.mode, rs_mode=args.rs_mode)
+    svc = DetectionService(cfg, params, lanes=args.lanes)
     sample = np.stack([data_lib.synth_image(i, args.img + 32)
                        for i in range(args.batch)])
     alloc = svc.warmup(sample)
-    print(f"allocation: streams={alloc.streams} J*={alloc.bottleneck_s:.4f}")
+    print(f"allocation: streams={alloc.streams} J*={alloc.bottleneck_s:.4f} "
+          f"lanes={svc.lanes}")
+    rng = np.random.default_rng(0)
+    sizes = [args.batch if not args.ragged else
+             int(rng.integers(1, args.batch + 1))
+             for _ in range(args.batches)]
     batches = [np.stack([data_lib.synth_image(1000 + k * args.batch + i,
                                               args.img + 32)
-                         for i in range(args.batch)])
-               for k in range(args.batches)]
-    rep = svc.serve(batches)
+                         for i in range(n)])
+               for k, n in enumerate(sizes)]
+    rep = svc.serve_sharded(batches) if args.sharded else svc.serve(batches)
     print(json.dumps(dataclasses.asdict(rep), indent=1))
 
 

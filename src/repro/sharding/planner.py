@@ -256,6 +256,21 @@ def decode_state_specs(cfg, plan: MeshPlan, state_abstract):
     return jax.tree_util.tree_map_with_path(spec_for, state_abstract)
 
 
+def detection_batch_spec(ndim: int) -> P:
+    """Detection image batch: leading batch dim on ``data``, spatial and
+    channel dims replicated (each image is decoded whole on one device)."""
+    return P("data", *([None] * (ndim - 1)))
+
+
+def shard_detection_batch(mesh, batch):
+    """Place a (padded, data-axis-divisible) detection batch on the 1-D
+    detection mesh.  Params/keys stay replicated; jit propagates the
+    batch sharding through preprocess/tile/decode, which are all
+    per-image, so no cross-device collectives appear in the graph."""
+    return jax.device_put(
+        batch, NamedSharding(mesh, detection_batch_spec(np.ndim(batch))))
+
+
 def to_shardings(specs, mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))

@@ -74,8 +74,8 @@ def test_elastic_restore_onto_new_sharding(tmp_path):
     """Restore lays out against the CURRENT mesh (elastic rescale)."""
     t = {"w": jnp.arange(16.0).reshape(4, 4)}
     ck.save(tmp_path, 3, t)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import _mesh
+    mesh = _mesh((1, 1), ("data", "model"))
     sh = {"w": jax.sharding.NamedSharding(
         mesh, jax.sharding.PartitionSpec("data", None))}
     out = ck.restore(tmp_path, 3, jax.eval_shape(lambda: t), shardings=sh)

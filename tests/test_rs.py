@@ -1,9 +1,18 @@
-"""Property-based tests of the Reed-Solomon stack (paper Appendix A):
-numpy reference codec, batched JAX decoder, GF tables, and the CPU pool.
+"""Tests of the Reed-Solomon stack (paper Appendix A): numpy reference
+codec, batched JAX decoder, GF tables, and the CPU pool.
+
+Property-based tests run when ``hypothesis`` is installed; seeded-random
+equivalents of each property always run, so the suite collects and
+passes on a bare jax+numpy+pytest environment too.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.rs.codec import DEFAULT_CODE, RSCode, rs_decode, rs_encode
 from repro.core.rs.gf import GF, bits_to_symbols, symbols_to_bits
@@ -14,12 +23,11 @@ CODES = [DEFAULT_CODE, RSCode(m=4, n=15, k=11), RSCode(m=8, n=32, k=24)]
 
 
 # ---------------------------------------------------------------------------
-# GF(2^m) field axioms
+# GF(2^m) field axioms — seeded-random versions (always run)
 # ---------------------------------------------------------------------------
 
 
-@given(st.integers(1, 15), st.integers(1, 15), st.integers(1, 15))
-def test_gf16_field_axioms(a, b, c):
+def _check_gf16_axioms(a, b, c):
     gf = GF(4)
     assert gf.mul(a, gf.mul(b, c)) == gf.mul(gf.mul(a, b), c)
     assert gf.mul(a, b) == gf.mul(b, a)
@@ -28,8 +36,7 @@ def test_gf16_field_axioms(a, b, c):
     assert gf.mul(a, gf.add(b, c)) == gf.add(gf.mul(a, b), gf.mul(a, c))
 
 
-@given(st.integers(0, 255), st.integers(0, 255))
-def test_gf256_mul_matches_carryless(a, b):
+def _check_gf256_mul_carryless(a, b):
     """Table multiply == carry-less polynomial multiply mod the primitive."""
     gf = GF(8)
     ref = 0
@@ -44,52 +51,127 @@ def test_gf256_mul_matches_carryless(a, b):
     assert int(gf.mul(a, b)) == ref
 
 
-@given(st.lists(st.integers(0, 1), min_size=48, max_size=48))
-def test_bits_symbols_roundtrip(bits):
-    s = bits_to_symbols(bits, 4)
-    assert np.array_equal(symbols_to_bits(s, 4), bits)
+def test_gf16_field_axioms_seeded():
+    rng = np.random.default_rng(0)
+    for a, b, c in rng.integers(1, 16, (200, 3)):
+        _check_gf16_axioms(int(a), int(b), int(c))
+
+
+def test_gf256_mul_matches_carryless_seeded():
+    rng = np.random.default_rng(1)
+    for a, b in rng.integers(0, 256, (200, 2)):
+        _check_gf256_mul_carryless(int(a), int(b))
+
+
+def test_bits_symbols_roundtrip_seeded():
+    rng = np.random.default_rng(2)
+    for _ in range(20):
+        bits = rng.integers(0, 2, 48).tolist()
+        s = bits_to_symbols(bits, 4)
+        assert np.array_equal(symbols_to_bits(s, 4), bits)
 
 
 # ---------------------------------------------------------------------------
-# codec properties
+# codec properties — seeded-random versions (always run)
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("code", CODES, ids=lambda c: f"n{c.n}k{c.k}m{c.m}")
-@settings(max_examples=25, deadline=None)
-@given(data=st.data())
-def test_roundtrip_within_capacity(code, data):
-    msg = np.array(data.draw(st.lists(st.integers(0, 1),
-                                      min_size=code.message_bits,
-                                      max_size=code.message_bits)))
+def _check_roundtrip_within_capacity(code, rng):
+    msg = rng.integers(0, 2, code.message_bits)
     cw = rs_encode(code, msg)
     assert np.array_equal(cw[: code.message_bits], msg), "systematic"
-    ne = data.draw(st.integers(0, code.t))
-    syms = data.draw(st.permutations(range(code.n)))[:ne]
+    ne = int(rng.integers(0, code.t + 1))
+    syms = rng.permutation(code.n)[:ne]
     bad = cw.copy()
     for s in syms:
-        bit = data.draw(st.integers(0, code.m - 1))
-        bad[s * code.m + bit] ^= 1
+        bad[s * code.m + int(rng.integers(0, code.m))] ^= 1
     res = rs_decode(code, bad)
     assert res.ok
     assert np.array_equal(res.message_bits, msg)
     assert res.n_corrected <= code.t
 
 
-@settings(max_examples=20, deadline=None)
-@given(data=st.data())
-def test_jax_decoder_matches_numpy(data):
+@pytest.mark.parametrize("code", CODES, ids=lambda c: f"n{c.n}k{c.k}m{c.m}")
+def test_roundtrip_within_capacity_seeded(code):
+    rng = np.random.default_rng(4)
+    for _ in range(25):
+        _check_roundtrip_within_capacity(code, rng)
+
+
+def test_jax_decoder_matches_numpy_seeded():
     code = DEFAULT_CODE
     dec = jax_rs.make_batch_decoder(code)
-    bits = np.array(data.draw(st.lists(
-        st.integers(0, 1), min_size=code.codeword_bits,
-        max_size=code.codeword_bits)))[None, :]
-    ref = rs_decode(code, bits[0])
+    rng = np.random.default_rng(5)
+    bits = rng.integers(0, 2, (20, code.codeword_bits))
     out = dec(bits)
-    assert bool(out["ok"][0]) == ref.ok
-    if ref.ok:
-        assert np.array_equal(np.asarray(out["message_bits"][0]),
-                              ref.message_bits)
+    for i in range(bits.shape[0]):
+        ref = rs_decode(code, bits[i])
+        assert bool(out["ok"][i]) == ref.ok
+        if ref.ok:
+            assert np.array_equal(np.asarray(out["message_bits"][i]),
+                                  ref.message_bits)
+
+
+# ---------------------------------------------------------------------------
+# property-based versions (hypothesis, when installed)
+# ---------------------------------------------------------------------------
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(1, 15), st.integers(1, 15), st.integers(1, 15))
+    def test_gf16_field_axioms(a, b, c):
+        _check_gf16_axioms(a, b, c)
+
+    @given(st.integers(0, 255), st.integers(0, 255))
+    def test_gf256_mul_matches_carryless(a, b):
+        _check_gf256_mul_carryless(a, b)
+
+    @given(st.lists(st.integers(0, 1), min_size=48, max_size=48))
+    def test_bits_symbols_roundtrip(bits):
+        s = bits_to_symbols(bits, 4)
+        assert np.array_equal(symbols_to_bits(s, 4), bits)
+
+    @pytest.mark.parametrize("code", CODES,
+                             ids=lambda c: f"n{c.n}k{c.k}m{c.m}")
+    @settings(max_examples=25, deadline=None)
+    @given(data=st.data())
+    def test_roundtrip_within_capacity(code, data):
+        msg = np.array(data.draw(st.lists(st.integers(0, 1),
+                                          min_size=code.message_bits,
+                                          max_size=code.message_bits)))
+        cw = rs_encode(code, msg)
+        assert np.array_equal(cw[: code.message_bits], msg), "systematic"
+        ne = data.draw(st.integers(0, code.t))
+        syms = data.draw(st.permutations(range(code.n)))[:ne]
+        bad = cw.copy()
+        for s in syms:
+            bit = data.draw(st.integers(0, code.m - 1))
+            bad[s * code.m + bit] ^= 1
+        res = rs_decode(code, bad)
+        assert res.ok
+        assert np.array_equal(res.message_bits, msg)
+        assert res.n_corrected <= code.t
+
+    @settings(max_examples=20, deadline=None)
+    @given(data=st.data())
+    def test_jax_decoder_matches_numpy(data):
+        code = DEFAULT_CODE
+        dec = jax_rs.make_batch_decoder(code)
+        bits = np.array(data.draw(st.lists(
+            st.integers(0, 1), min_size=code.codeword_bits,
+            max_size=code.codeword_bits)))[None, :]
+        ref = rs_decode(code, bits[0])
+        out = dec(bits)
+        assert bool(out["ok"][0]) == ref.ok
+        if ref.ok:
+            assert np.array_equal(np.asarray(out["message_bits"][0]),
+                                  ref.message_bits)
+
+
+# ---------------------------------------------------------------------------
+# deterministic batch / capacity tests (always run)
+# ---------------------------------------------------------------------------
 
 
 @pytest.mark.parametrize("code", CODES[:2], ids=lambda c: f"n{c.n}k{c.k}")

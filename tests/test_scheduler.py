@@ -1,8 +1,16 @@
 """Property tests for Algorithm 1 (adaptive stream/lane allocation) and
-Algorithm 2 (LPT mini-batch scheduling) invariants."""
+Algorithm 2 (LPT mini-batch scheduling) invariants.
+
+Hypothesis-based versions run when ``hypothesis`` is installed; seeded-
+random equivalents always run."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import allocator, scheduler, tiling
 import jax
@@ -14,14 +22,7 @@ def mk_profiles(ts, us, oh=1e-4):
             for i, (t, u) in enumerate(zip(ts, us))]
 
 
-@settings(max_examples=40, deadline=None)
-@given(
-    ts=st.lists(st.floats(1e-5, 1e-2), min_size=3, max_size=3),
-    us=st.lists(st.floats(1e3, 1e7), min_size=3, max_size=3),
-    B=st.sampled_from([16, 64, 256]),
-    budget=st.integers(3, 32),
-)
-def test_allocation_respects_budget_and_memory(ts, us, B, budget):
+def _check_allocation_budget_memory(ts, us, B, budget):
     profs = mk_profiles(ts, us)
     cap = 16e9
     alloc = allocator.adaptive_allocation(profs, global_batch=B,
@@ -32,6 +33,86 @@ def test_allocation_respects_budget_and_memory(ts, us, B, budget):
     # monotone improvement along the search trace
     js = [j for _, j in alloc.history]
     assert all(js[i + 1] <= js[i] + 1e-12 for i in range(len(js) - 1))
+
+
+def _check_lpt_conserves(lats, n_lanes):
+    tasks = [scheduler.Task(i, n_samples=8, tile=32, lat=l, mem=l * 1e5)
+             for i, l in enumerate(lats)]
+    total = sum(t.n_samples for t in tasks)
+    sched = scheduler.lpt_schedule(tasks, n_lanes=n_lanes,
+                                   balance_slack=0.25, mem_cap=1e12,
+                                   b_min=1, global_batch=total)
+    got = sum(t.n_samples for lane in sched.lanes for t in lane)
+    assert got == total
+    assert len(sched.lanes) == n_lanes
+    assert all(t.minibatch >= 1 for lane in sched.lanes for t in lane)
+
+
+def _check_tile_offsets_in_bounds(strategy, tile, seed):
+    H = W = 64
+    key = jax.random.key(seed)
+    offs = tiling.tile_offsets(strategy, key, (H, W), tile, 16)
+    assert offs.shape == (16, 2)
+    assert bool((offs >= 0).all())
+    assert bool((offs[:, 0] <= H - tile).all())
+    assert bool((offs[:, 1] <= W - tile).all())
+    if strategy == "random_grid":
+        assert bool((offs % tile == 0).all())
+    if strategy == "fixed":
+        assert bool((offs == 0).all())
+
+
+def test_allocation_respects_budget_and_memory_seeded():
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        _check_allocation_budget_memory(
+            rng.uniform(1e-5, 1e-2, 3).tolist(),
+            rng.uniform(1e3, 1e7, 3).tolist(),
+            int(rng.choice([16, 64, 256])), int(rng.integers(3, 33)))
+
+
+def test_lpt_schedule_conserves_samples_seeded():
+    rng = np.random.default_rng(1)
+    for _ in range(30):
+        n = int(rng.integers(1, 41))
+        _check_lpt_conserves(rng.uniform(1e-4, 1.0, n).tolist(),
+                             int(rng.integers(1, 9)))
+
+
+def test_tile_offsets_in_bounds_seeded():
+    rng = np.random.default_rng(2)
+    for strategy in tiling.STRATEGIES:
+        for tile in (8, 16, 32):
+            _check_tile_offsets_in_bounds(strategy, tile,
+                                          int(rng.integers(0, 1001)))
+
+
+def test_per_image_offsets_independent_of_batch():
+    """The lane/sharding determinism contract: image i's offset depends
+    only on keys[i], so appending pad images changes nothing."""
+    base = jax.random.key(5)
+    keys8 = jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(8))
+    keys6 = jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(6))
+    for strategy in tiling.STRATEGIES:
+        o8 = tiling.per_image_offsets(strategy, keys8, (64, 64), 16)
+        o6 = tiling.per_image_offsets(strategy, keys6, (64, 64), 16)
+        np.testing.assert_array_equal(np.asarray(o8[:6]), np.asarray(o6))
+        assert bool((o8 >= 0).all()) and bool((o8 <= 64 - 16).all())
+        if strategy == "random_grid":
+            assert bool((o8 % 16 == 0).all())
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        ts=st.lists(st.floats(1e-5, 1e-2), min_size=3, max_size=3),
+        us=st.lists(st.floats(1e3, 1e7), min_size=3, max_size=3),
+        B=st.sampled_from([16, 64, 256]),
+        budget=st.integers(3, 32),
+    )
+    def test_allocation_respects_budget_and_memory(ts, us, B, budget):
+        _check_allocation_budget_memory(ts, us, B, budget)
 
 
 def test_allocation_gives_more_streams_to_bottleneck():
@@ -56,22 +137,15 @@ def test_allocation_small_batch_stays_conservative():
     assert sum(a16.streams) <= sum(a256.streams)
 
 
-@settings(max_examples=30, deadline=None)
-@given(
-    lats=st.lists(st.floats(1e-4, 1.0), min_size=1, max_size=40),
-    n_lanes=st.integers(1, 8),
-)
-def test_lpt_schedule_conserves_samples(lats, n_lanes):
-    tasks = [scheduler.Task(i, n_samples=8, tile=32, lat=l, mem=l * 1e5)
-             for i, l in enumerate(lats)]
-    total = sum(t.n_samples for t in tasks)
-    sched = scheduler.lpt_schedule(tasks, n_lanes=n_lanes,
-                                   balance_slack=0.25, mem_cap=1e12,
-                                   b_min=1, global_batch=total)
-    got = sum(t.n_samples for lane in sched.lanes for t in lane)
-    assert got == total
-    assert len(sched.lanes) == n_lanes
-    assert all(t.minibatch >= 1 for lane in sched.lanes for t in lane)
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        lats=st.lists(st.floats(1e-4, 1.0), min_size=1, max_size=40),
+        n_lanes=st.integers(1, 8),
+    )
+    def test_lpt_schedule_conserves_samples(lats, n_lanes):
+        _check_lpt_conserves(lats, n_lanes)
 
 
 def test_lpt_balances_loads():
@@ -104,24 +178,16 @@ def test_straggler_monitor_reissues_once():
 # ---------------------------------------------------------------------------
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    strategy=st.sampled_from(tiling.STRATEGIES),
-    tile=st.sampled_from([8, 16, 32]),
-    seed=st.integers(0, 1000),
-)
-def test_tile_offsets_in_bounds(strategy, tile, seed):
-    H = W = 64
-    key = jax.random.key(seed)
-    offs = tiling.tile_offsets(strategy, key, (H, W), tile, 16)
-    assert offs.shape == (16, 2)
-    assert bool((offs >= 0).all())
-    assert bool((offs[:, 0] <= H - tile).all())
-    assert bool((offs[:, 1] <= W - tile).all())
-    if strategy == "random_grid":
-        assert bool((offs % tile == 0).all())
-    if strategy == "fixed":
-        assert bool((offs == 0).all())
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        strategy=st.sampled_from(tiling.STRATEGIES),
+        tile=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 1000),
+    )
+    def test_tile_offsets_in_bounds(strategy, tile, seed):
+        _check_tile_offsets_in_bounds(strategy, tile, seed)
 
 
 def test_extract_tiles_matches_manual_slice():
