@@ -33,15 +33,17 @@ def measured_profiles():
                           code=tcfg.code)
     pipe = DetectionPipeline(cfg, params["dec"])
     raw = jnp.asarray(np.stack([synth_image(i, 160) for i in range(16)]))
-    pre = allocator.profile_stage(
-        lambda b: jax.block_until_ready(pipe._preprocess(b)), raw,
-        name="pre")
-    x = pipe._preprocess(raw)
     key = jax.random.key(0)
+    # profile the actual stage functions (tile-first ingest emits the
+    # decode input directly; staged ingest the full preprocessed image)
+    pre = allocator.profile_stage(
+        lambda b: jax.block_until_ready(pipe._ingest(b, key)), raw,
+        name="pre")
+    x = pipe._ingest(raw, key)
     dec = allocator.profile_stage(
-        lambda b: jax.block_until_ready(pipe._decode(b, key)), x,
+        lambda b: jax.block_until_ready(pipe._decode_x(b, key)), x,
         name="dec")
-    bits = np.asarray((pipe._decode(x, key) > 0).astype(np.int32))
+    bits = np.asarray((pipe._decode_x(x, key) > 0).astype(np.int32))
     t0 = time.perf_counter()
     for r in bits:
         rs_decode(cfg.code, r)

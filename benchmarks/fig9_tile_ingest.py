@@ -1,0 +1,100 @@
+"""Fig. 9 (repo-native): staged vs tile-first ingest.
+
+The staged qrmark ingest resizes/normalises the FULL image while the
+decode stage consumes one l x l tile; the tile-first kernel
+(``kernels.fused_tile_preprocess``) slices the interpolation matrices to
+the selected tile before the matmuls, so ingest computes exactly the
+decode input.  This benchmark quantifies that cut both ways:
+
+* analytically — XLA ``cost_analysis()`` FLOPs / bytes-accessed of the
+  two jitted ingest functions (interpret-mode Pallas lowers to plain
+  HLO, so the numbers are the real op counts);
+* empirically — wall time per call on this host.
+
+Writes ``experiments/bench/BENCH_tile_ingest.json`` (a machine-readable
+series for the perf trajectory; schema: one row per (img, tile) config
+with staged/tile_first flops, bytes, wall seconds, and the ratios).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import tiling
+from repro.data.pipeline import synth_image
+from repro.kernels import ops as kops
+
+# (img_size, tile, batch); raw input is img + 32 on a side
+CONFIGS = ((256, 64, 8), (256, 128, 8), (128, 32, 16))
+STRATEGY = "random_grid"
+
+
+def _cost(fn, *args):
+    c = fn.lower(*args).compile().cost_analysis()
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    return (float(c.get("flops", 0.0)),
+            float(c.get("bytes accessed", 0.0)))
+
+
+def build_ingest_fns(img: int, tile: int):
+    resize = img + img // 8
+
+    def staged(raw):
+        return kops.fused_preprocess(raw, resize=resize, crop=img)
+
+    def tile_first(raw, batch_key):
+        keys = jax.vmap(
+            lambda i: jax.random.fold_in(batch_key, i))(
+                jnp.arange(raw.shape[0]))
+        offs = tiling.tile_first_offsets(STRATEGY, keys, img_size=img,
+                                         tile=tile)
+        return kops.fused_tile_preprocess(raw, offs, resize=resize,
+                                          crop=img, tile=tile)
+
+    return jax.jit(staged), jax.jit(tile_first)
+
+
+def main(quick: bool = False):
+    configs = CONFIGS[:1] if quick else CONFIGS
+    iters = 2 if quick else 5
+    rows = []
+    for img, tile, b in configs:
+        if quick:
+            b = min(b, 4)
+        raw = jnp.asarray(np.stack(
+            [synth_image(i, img + 32) for i in range(b)]))
+        key = jax.random.key(0)
+        staged, tile_first = build_ingest_fns(img, tile)
+
+        s_flops, s_bytes = _cost(staged, raw)
+        t_flops, t_bytes = _cost(tile_first, raw, key)
+        s_wall = common.timeit(staged, raw, iters=iters)
+        t_wall = common.timeit(tile_first, raw, key, iters=iters)
+
+        red = s_flops / t_flops if t_flops else float("inf")
+        speed = s_wall / t_wall if t_wall else float("inf")
+        rows.append({
+            "img": img, "tile": tile, "batch": b, "raw": img + 32,
+            "strategy": STRATEGY,
+            "staged": {"flops": s_flops, "bytes": s_bytes,
+                       "wall_s": s_wall},
+            "tile_first": {"flops": t_flops, "bytes": t_bytes,
+                           "wall_s": t_wall},
+            "flop_reduction": round(red, 2),
+            "bytes_reduction": round(s_bytes / t_bytes, 2) if t_bytes
+            else None,
+            "wall_speedup": round(speed, 2),
+        })
+        common.emit(
+            f"fig9/img{img}_tile{tile}", t_wall,
+            f"flops_staged={s_flops:.3g};flops_tile_first={t_flops:.3g};"
+            f"flop_reduction={red:.2f}x;wall_speedup={speed:.2f}x")
+    common.save_json("BENCH_tile_ingest", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

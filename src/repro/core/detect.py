@@ -8,9 +8,21 @@ Stages: ingest (host->device + fused preprocess) -> tiled decode
   full-image decode, synchronous CPU RS per batch.
 * ``tiled``       — + tile-based decode (the naive-tiling midpoint the
   paper profiles at ~1.17x).
-* ``qrmark``      — + fused preprocess kernel, adaptive lane allocation,
+* ``qrmark``      — + tile-first fused ingest, adaptive lane allocation,
   LPT mini-batch scheduling, inter-batch interleaving, async RS
   (CPU thread pool w/ codebook, or fully on-device batched RS).
+
+Tile-first ingest (the qrmark default, ``cfg.tile_first``): per-image
+tile offsets are derived from the fold_in keys *before* ingest — they
+depend only on the key and the static image geometry — and handed to
+``kernels.ops.fused_tile_preprocess``, which slices the interpolation
+matrices down to the selected tile's rows/columns so ingest computes
+exactly the (b, tile, tile, 3) decode input and never materialises the
+full preprocessed image (~4-6x fewer ingest FLOPs at 256^2/64^2,
+~16x less ingest output).  Decode is then just the extractor forward.
+``tile_first=False`` keeps the staged full-image preprocess +
+``select_tiles_per_image`` path; both are bit-identical by construction
+(output row i of the interpolation matmul depends only on row i of Ry).
 
 Execution engines, all driving the same jitted stage functions:
 
@@ -23,11 +35,17 @@ Execution engines, all driving the same jitted stage functions:
   (possibly ragged) batch across all local devices via a 1-D
   ``NamedSharding`` mesh.
 
+Stage handoff is zero-copy: payloads stay device arrays between lanes
+(bits are thresholded on device, ``rs_mode="device"`` feeds them
+straight into the batched decoder — the Pallas Berlekamp-Welch kernel
+for the default (15,12) GF(16) code, ``jax_rs`` otherwise) and nothing
+is pulled to numpy before the sink (:meth:`_finish`).
+
 RNG discipline: batch k uses ``fold_in(key(seed), k)`` and image i of a
 batch uses ``fold_in(batch_key, i)``, so results are bit-identical
 regardless of lane count, execution order, batch padding, or sharding.
 
-The pipeline object is the unit the benchmarks (Fig. 6/7/8) drive.
+The pipeline object is the unit the benchmarks (Fig. 6/7/8/9) drive.
 """
 from __future__ import annotations
 
@@ -48,6 +66,9 @@ from repro.core.rs.cpu_pool import RSCorrectionPool
 
 STAGE_NAMES = ("ingest", "decode", "rs")
 
+# the code the Pallas Berlekamp-Welch kernel is specialised for
+_PALLAS_RS_CODE = (4, 15, 12)  # (m, n, k)
+
 
 @dataclasses.dataclass
 class DetectionConfig:
@@ -59,10 +80,29 @@ class DetectionConfig:
     mode: str = "qrmark"           # sequential | tiled | qrmark
     rs_mode: str = "device"        # device | cpu_pool | cpu_sync
     fused_preprocess: bool = True
+    tile_first: bool = True        # fuse tile selection into ingest
     interleave: bool = True
     rs_threads: int = 32
     lane_budget: int = 8
     seed: int = 0
+
+
+def make_device_rs(code: RSCode) -> Callable:
+    """The on-device batched RS engine: the Pallas Berlekamp-Welch
+    kernel for the code it is specialised for, ``jax_rs`` otherwise.
+    Jit-able and safe to inline into a larger jitted graph — every
+    engine (fused fast path, lane executor, sharded run_batch) must use
+    the same decoder so failure tie-breaking never diverges."""
+    if (code.m, code.n, code.k) == _PALLAS_RS_CODE:
+        from repro.kernels import ops as kops
+
+        def decode(bits):
+            return kops.rs_decode(bits, code=code)
+
+        # jitted so sharded inputs (run_batch) go through the SPMD
+        # partitioner instead of eager multi-device dispatch
+        return jax.jit(decode)
+    return jax_rs.make_batch_decoder(code)
 
 
 class DetectionPipeline:
@@ -99,6 +139,8 @@ class DetectionPipeline:
             raise ValueError(f"unknown pipeline mode {cfg.mode!r}")
         if cfg.rs_mode not in ("device", "cpu_pool", "cpu_sync"):
             raise ValueError(f"unknown rs_mode {cfg.rs_mode!r}")
+        self.tile_first = (cfg.tile_first and cfg.mode == "qrmark"
+                           and cfg.fused_preprocess)
 
         if cfg.fused_preprocess and cfg.mode == "qrmark":
             from repro.kernels import ops as kops
@@ -110,6 +152,19 @@ class DetectionPipeline:
                 lambda raw: transforms.preprocess_reference(
                     raw, resize=cfg.resize_src, crop=cfg.img_size))
 
+        # tile-first ingest: offsets from the per-image keys (static
+        # geometry only), then one kernel straight to the decode input
+        def ingest_tiles(raw, batch_key):
+            from repro.kernels import ops as kops
+            keys = self._image_keys(batch_key, raw.shape[0])
+            offs = tiling.tile_first_offsets(
+                cfg.strategy, keys, img_size=cfg.img_size, tile=cfg.tile)
+            return kops.fused_tile_preprocess(
+                raw, offs, resize=cfg.resize_src, crop=cfg.img_size,
+                tile=cfg.tile)
+
+        self._ingest_tiles = jax.jit(ingest_tiles)
+
         def decode_stage(images, batch_key):
             if cfg.mode == "sequential":
                 tiles = images  # full-image decode
@@ -120,25 +175,32 @@ class DetectionPipeline:
             return extractor_forward(self.params, tiles)
 
         self._decode = jax.jit(decode_stage)
+        self._extract = jax.jit(
+            lambda tiles: extractor_forward(self.params, tiles))
+        self._bits = jax.jit(
+            lambda logits: (logits > 0).astype(jnp.int32))
 
         if cfg.rs_mode == "device":
-            self._device_rs = jax_rs.make_batch_decoder(self.code)
+            self._device_rs = make_device_rs(self.code)
         elif cfg.rs_mode == "cpu_pool":
             self._rs_pool = RSCorrectionPool(self.code,
                                              n_threads=cfg.rs_threads)
 
         # fully fused fast path (qrmark + device RS): one jitted graph
         if cfg.mode == "qrmark" and cfg.rs_mode == "device":
-            dev_decoder = jax_rs.make_decoder(self.code)
+            dev_decoder = self._device_rs  # one decoder for every engine
 
             def fused(raw, batch_key):
-                x = self._preprocess_fn_inline(raw)
-                keys = self._image_keys(batch_key, x.shape[0])
-                tiles, _ = tiling.select_tiles_per_image(
-                    cfg.strategy, keys, x, cfg.tile)
+                if self.tile_first:
+                    tiles = ingest_tiles(raw, batch_key)
+                else:
+                    x = self._preprocess_fn_inline(raw)
+                    keys = self._image_keys(batch_key, x.shape[0])
+                    tiles, _ = tiling.select_tiles_per_image(
+                        cfg.strategy, keys, x, cfg.tile)
                 logits = extractor_forward(self.params, tiles)
                 bits = (logits > 0).astype(jnp.int32)
-                return jax.vmap(dev_decoder)(bits), logits
+                return dev_decoder(bits), logits
 
             self._fused = jax.jit(fused)
         else:
@@ -152,6 +214,21 @@ class DetectionPipeline:
                                          crop=cfg.img_size)
         return transforms.preprocess_reference(raw, resize=cfg.resize_src,
                                                crop=cfg.img_size)
+
+    # -- staged compute, shared by detect_batch and run_batch ----------
+    def _ingest(self, raw, key):
+        """raw uint8 batch -> decode input: the selected tiles directly
+        (tile-first) or the full preprocessed images (staged)."""
+        if self.tile_first:
+            return self._ingest_tiles(raw, key)
+        return self._preprocess(raw)
+
+    def _decode_x(self, x, key):
+        """decode input -> bit logits (tile selection already folded
+        into ingest on the tile-first path)."""
+        if self.tile_first:
+            return self._extract(x)
+        return self._decode(x, key)
 
     # -- RS correction, host-side engines ------------------------------
     def _rs_host(self, bits: np.ndarray):
@@ -178,25 +255,28 @@ class DetectionPipeline:
         return msg, ok, ncorr
 
     def _rs_correct(self, bits):
-        """(msg, ok, ncorr) via the configured RS engine — device batch
-        decoder or one of the host paths.  ``bits`` may be a device or
-        numpy int array of shape (b, codeword_bits)."""
+        """(msg, ok, ncorr) via the configured RS engine.  ``bits`` stays
+        a device array end-to-end on the device path (zero-copy handoff);
+        host engines pull it to numpy here, at their host boundary."""
         if self.cfg.rs_mode == "device":
-            rs_out = self._device_rs(jnp.asarray(bits))
-            return (np.asarray(rs_out["message_bits"]),
-                    np.asarray(rs_out["ok"]),
-                    np.asarray(rs_out["n_corrected"]))
+            rs_out = self._device_rs(bits if isinstance(bits, jax.Array)
+                                     else jnp.asarray(bits))
+            return (rs_out["message_bits"], rs_out["ok"],
+                    rs_out["n_corrected"])
         return self._rs_host(np.asarray(bits))
 
     def _finish(self, msg, ok, ncorr, logits, b) -> Dict[str, np.ndarray]:
+        """The sink: the single place device arrays become numpy."""
         with self._stats_lock:
             self.stats["batches"] += 1
             self.stats["images"] += b
-        out = {"message_bits": msg, "ok": ok, "n_corrected": ncorr,
+        out = {"message_bits": np.asarray(msg), "ok": np.asarray(ok),
+               "n_corrected": np.asarray(ncorr),
                "logits": np.asarray(logits)}
         if self.gt is not None:
             out["match"] = np.all(
-                msg == self.gt[None, : msg.shape[1]], axis=1)
+                out["message_bits"] == self.gt[None, : msg.shape[1]],
+                axis=1)
         return out
 
     # ------------------------------------------------------------------
@@ -209,14 +289,12 @@ class DetectionPipeline:
             self._seq += 1
         if self._fused is not None:
             (rs_out, logits) = self._fused(raw_batch, key)
-            msg = np.asarray(rs_out["message_bits"])
-            ok = np.asarray(rs_out["ok"])
-            ncorr = np.asarray(rs_out["n_corrected"])
+            msg, ok, ncorr = (rs_out["message_bits"], rs_out["ok"],
+                              rs_out["n_corrected"])
         else:
-            x = self._preprocess(raw_batch)
-            logits = self._decode(x, key)
-            bits = np.asarray((logits > 0).astype(jnp.int32))
-            msg, ok, ncorr = self._rs_correct(bits)
+            x = self._ingest(raw_batch, key)
+            logits = self._decode_x(x, key)
+            msg, ok, ncorr = self._rs_correct(self._bits(logits))
         return self._finish(msg, ok, ncorr, logits, b)
 
     # -- stage graph ----------------------------------------------------
@@ -239,23 +317,25 @@ class DetectionPipeline:
 
         Payloads are dicts carrying ``raw`` -> ``x`` -> ``logits`` ->
         result; ``key`` is pre-derived by the feeder so stage functions
-        are pure and any lane count is bit-identical to serial."""
+        are pure and any lane count is bit-identical to serial.  Between
+        lanes everything stays a device array (jitted stage fns return
+        futures; numpy conversion happens only in the :meth:`_finish`
+        sink)."""
         cfg = self.cfg
         ln = {**self.default_lanes(), **(lanes or {})}
         depth = 2 if cfg.interleave else 1
 
         def st_ingest(p):
-            p["x"] = self._preprocess(jax.device_put(p["raw"]))
+            p["x"] = self._ingest(jax.device_put(p["raw"]), p["key"])
             return p
 
         def st_decode(p):
-            p["logits"] = self._decode(p["x"], p["key"])
+            p["logits"] = self._decode_x(p["x"], p["key"])
             return p
 
         def st_rs(p):
             logits = p["logits"]
-            bits = np.asarray((logits > 0).astype(jnp.int32))
-            msg, ok, ncorr = self._rs_correct(bits)
+            msg, ok, ncorr = self._rs_correct(self._bits(logits))
             return self._finish(msg, ok, ncorr, logits, logits.shape[0])
 
         return [
@@ -317,10 +397,11 @@ class DetectionPipeline:
 
         The batch is padded up to the mesh's data-axis size, sharded
         with a ``NamedSharding`` over the 1-D device mesh, pushed
-        through the staged (non-fused) jitted functions, and sliced
-        back to the true batch size.  Per-image RNG keys make the pad
-        rows inert: every real image's result is bit-identical to the
-        single-device staged path."""
+        through the staged jitted functions (tile-first ingest when
+        configured — tile extraction is per-image, so the sharded graph
+        stays collective-free), and sliced back to the true batch size.
+        Per-image RNG keys make the pad rows inert: every real image's
+        result is bit-identical to the single-device staged path."""
         from repro.launch import mesh as mesh_lib
         from repro.sharding import planner
 
@@ -337,9 +418,9 @@ class DetectionPipeline:
             raw_np = np.concatenate(
                 [raw_np, np.repeat(raw_np[-1:], pad, axis=0)])
         x_in = planner.shard_detection_batch(mesh, raw_np)
-        x = self._preprocess(x_in)
-        logits = self._decode(x, key)
-        bits = (logits > 0).astype(jnp.int32)
+        x = self._ingest(x_in, key)
+        logits = self._decode_x(x, key)
+        bits = self._bits(logits)
         if self.cfg.rs_mode == "device":
             # decode the padded batch (shape-stable jit), slice after
             msg, ok, ncorr = (a[:b] for a in self._rs_correct(bits))
@@ -357,13 +438,19 @@ def verify_against_key(message_bits: np.ndarray, key_bits: np.ndarray,
     """Statistical verification: match if the bit agreement exceeds the
     threshold tau solving  P[Binomial(n, 0.5) >= tau] <= fpr."""
     n = key_bits.shape[-1]
-    # Chernoff-style threshold (exact binomial tail via DP for small n)
-    tail = np.zeros(n + 1)
-    # P[X >= j] for X ~ Bin(n, 1/2)
+    tau = binomial_threshold(n, fpr)
+    agree = np.sum(message_bits == key_bits[None, :], axis=-1)
+    return agree >= tau
+
+
+def binomial_threshold(n: int, fpr: float) -> int:
+    """Smallest tau with  P[Binomial(n, 1/2) >= tau] <= fpr  (exact
+    tail via the binomial coefficients).  When even full agreement
+    cannot reach the target (2^-n > fpr), returns n + 1 so
+    verification fails closed instead of accepting everything."""
     from math import comb
     probs = np.array([comb(n, i) for i in range(n + 1)], dtype=float)
     probs /= probs.sum()
     cum = np.cumsum(probs[::-1])[::-1]
-    tau = int(np.argmax(cum <= fpr))
-    agree = np.sum(message_bits == key_bits[None, :], axis=-1)
-    return agree >= tau
+    sat = np.nonzero(cum <= fpr)[0]
+    return int(sat[0]) if sat.size else n + 1

@@ -86,6 +86,20 @@ def select_tiles_per_image(strategy: str, keys, images, tile: int):
     return extract_tiles(images, offs, tile), offs
 
 
+def tile_first_offsets(strategy: str, keys, *, img_size: int, tile: int):
+    """Offsets for the tile-first ingest path.
+
+    Tile choice depends only on the per-image PRNG key and the *static*
+    preprocessed geometry (img_size x img_size), never on pixel data —
+    so the offsets can be derived BEFORE ingest runs and handed to
+    ``kernels.ops.fused_tile_preprocess``, which slices the interpolation
+    matrices down to the selected tile's rows/columns instead of
+    materialising the full preprocessed image.  Identical draws to
+    :func:`per_image_offsets`, so the tile-first and staged paths pick
+    the same tile for every image."""
+    return per_image_offsets(strategy, keys, (img_size, img_size), tile)
+
+
 def grid_partition(images, tile: int):
     """All non-overlapping l x l tiles: (b, gy*gx, tile, tile, C)."""
     b, H, W, C = images.shape

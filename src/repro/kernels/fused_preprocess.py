@@ -29,18 +29,35 @@ from repro.core.transforms import IMAGENET_MEAN, IMAGENET_STD
 from repro.kernels.ref import resize_matrix
 
 
-def _kernel(img_ref, ry_ref, rx_ref, scale_ref, bias_ref, out_ref):
-    img = img_ref[0].astype(jnp.float32)          # (H, W, 3)
-    ry = ry_ref[...]                              # (crop, H)
-    rx = rx_ref[...]                              # (W, crop)
-    scale = scale_ref[...]                        # (3,)
-    bias = bias_ref[...]                          # (3,)
+def interp_affine(img, ry, rx, scale, bias):
+    """The shared kernel math: per-channel Ry @ img @ Rx + affine
+    normalise.  Both the staged and the tile-first kernels
+    (``fused_tile_preprocess.py``) call this — one body, so the
+    bit-identity contract between the two paths can't silently drift.
+
+    img (H, W, 3) f32; ry (rows, H); rx (W, cols) -> (rows, cols, 3).
+    """
     outs = []
     for c in range(3):  # channels unrolled: 2 MXU matmuls per channel
         t = jnp.dot(ry, img[:, :, c], preferred_element_type=jnp.float32)
         t = jnp.dot(t, rx, preferred_element_type=jnp.float32)
         outs.append(t * scale[c] + bias[c])
-    out_ref[0] = jnp.stack(outs, axis=-1)
+    return jnp.stack(outs, axis=-1)
+
+
+def interp_matrices(H: int, W: int, *, resize: int, crop: int):
+    """The (crop, H) row / (W, crop) column interpolation matrices of
+    the resize+centercrop composition (host constants)."""
+    off = (resize - crop) // 2
+    ry = jnp.asarray(resize_matrix(H, resize, off, crop))          # (crop,H)
+    rx = jnp.asarray(resize_matrix(W, resize, off, crop).T)        # (W,crop)
+    return ry, rx
+
+
+def _kernel(img_ref, ry_ref, rx_ref, scale_ref, bias_ref, out_ref):
+    img = img_ref[0].astype(jnp.float32)          # (H, W, 3)
+    out_ref[0] = interp_affine(img, ry_ref[...], rx_ref[...],
+                               scale_ref[...], bias_ref[...])
 
 
 def fused_preprocess(raw, *, resize: int = 256, crop: int = 256,
@@ -55,9 +72,7 @@ def fused_preprocess(raw, *, resize: int = 256, crop: int = 256,
     std = np.asarray(IMAGENET_STD if std is None else std, np.float32)
     b, H, W, C = raw.shape
     assert C == 3
-    off = (resize - crop) // 2
-    ry = jnp.asarray(resize_matrix(H, resize, off, crop))          # (crop,H)
-    rx = jnp.asarray(resize_matrix(W, resize, off, crop).T)        # (W,crop)
+    ry, rx = interp_matrices(H, W, resize=resize, crop=crop)
     scale = jnp.asarray(1.0 / (255.0 * std))
     bias = jnp.asarray(-mean / std)
 

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: tile-first fused Resize -> Crop -> Normalize ->
+Tile-extract.
+
+The staged ingest (``fused_preprocess.py``) resizes/normalises the FULL
+image even though the qrmark decode stage reads exactly one l x l tile of
+it — at the default 256^2 image / 64^2 tile that is ~16x more output (and
+>4x more MXU FLOPs) than the pipeline ever consumes.  This kernel makes
+the *selected tile* the unit of ingest work: because the staged transform
+is two interpolation matmuls per channel,
+
+    full[c] = scale_c * (Ry @ img[:, :, c] @ Rx) + bias_c,
+
+the (y, x) tile of the output only needs rows [y, y+l) of ``Ry`` and
+columns [x, x+l) of ``Rx`` — output row i depends on nothing but row i of
+``Ry``, so slicing the interpolation matrices *before* the matmuls yields
+bit-identical values to slicing the full preprocessed image after them,
+while shrinking the per-image FLOPs from
+
+    3 * (crop*H*W + crop*W*crop)   to   3 * (l*H*W + l*W*l).
+
+Per-image tile offsets (already derived from per-image fold_in keys by
+``tiling.per_image_offsets``, so they are available *before* ingest) are
+applied as a vmapped ``dynamic_slice`` over the shared (crop, H)/(W, crop)
+matrices on the way into the kernel; the kernel itself is two small MXU
+matmuls per channel per grid step and writes the (b, l, l, 3) decode
+input directly — the full preprocessed image is never materialised.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.transforms import IMAGENET_MEAN, IMAGENET_STD
+from repro.kernels.fused_preprocess import interp_affine, interp_matrices
+
+
+def _kernel(img_ref, ry_ref, rx_ref, scale_ref, bias_ref, out_ref):
+    img = img_ref[0].astype(jnp.float32)          # (H, W, 3)
+    # ry (tile, H) / rx (W, tile) are this image's pre-sliced matrices;
+    # the math is the staged kernel's interp_affine, shared verbatim
+    out_ref[0] = interp_affine(img, ry_ref[0], rx_ref[0],
+                               scale_ref[...], bias_ref[...])
+
+
+def slice_interp_matrices(offsets, *, H: int, W: int, resize: int,
+                          crop: int, tile: int):
+    """Per-image (tile, H) row / (W, tile) column slices of the shared
+    interpolation matrices at the given (b, 2) int32 tile offsets
+    (offsets live in the cropped image's coordinate space)."""
+    ry, rx = interp_matrices(H, W, resize=resize, crop=crop)
+
+    def one(o):
+        return (jax.lax.dynamic_slice(ry, (o[0], 0), (tile, H)),
+                jax.lax.dynamic_slice(rx, (0, o[1]), (W, tile)))
+
+    return jax.vmap(one)(offsets.astype(jnp.int32))
+
+
+def fused_tile_preprocess(raw, offsets, *, resize: int = 256,
+                          crop: int = 256, tile: int = 64,
+                          mean=None, std=None, interpret: bool = True):
+    """uint8 (b, H, W, 3) + tile offsets (b, 2) -> f32 (b, tile, tile, 3).
+
+    Output equals ``extract_tiles(fused_preprocess(raw), offsets, tile)``
+    bit for bit, without materialising the (b, crop, crop, 3)
+    intermediate.  interpret=True executes on CPU (this container);
+    interpret=False is the TPU target.  Not jitted here: callers jit
+    around it (the interpolation matrices are host constants).
+    """
+    mean = np.asarray(IMAGENET_MEAN if mean is None else mean, np.float32)
+    std = np.asarray(IMAGENET_STD if std is None else std, np.float32)
+    b, H, W, C = raw.shape
+    assert C == 3
+    assert tile <= crop, f"tile {tile} exceeds crop {crop}"
+    ry_t, rx_t = slice_interp_matrices(
+        offsets, H=H, W=W, resize=resize, crop=crop, tile=tile)
+    scale = jnp.asarray(1.0 / (255.0 * std))
+    bias = jnp.asarray(-mean / std)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, H, W, 3), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, tile, H), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, W, tile), lambda i: (i, 0, 0)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, tile, tile, 3), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, tile, tile, 3), jnp.float32),
+        interpret=interpret,
+    )(raw, ry_t, rx_t, scale, bias)

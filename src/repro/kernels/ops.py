@@ -10,6 +10,8 @@ import jax
 
 from repro.kernels.fused_preprocess import fused_preprocess as \
     _fused_preprocess
+from repro.kernels.fused_tile_preprocess import fused_tile_preprocess as \
+    _fused_tile_preprocess
 
 
 def fused_preprocess(raw, *, resize: int = 256, crop: int = 256,
@@ -18,6 +20,18 @@ def fused_preprocess(raw, *, resize: int = 256, crop: int = 256,
     interpret = jax.default_backend() != "tpu"
     return _fused_preprocess(raw, resize=resize, crop=crop, mean=mean,
                              std=std, interpret=interpret)
+
+
+def fused_tile_preprocess(raw, offsets, *, resize: int = 256,
+                          crop: int = 256, tile: int = 64,
+                          mean=None, std=None):
+    """Tile-first fused ingest: Resize->Crop->Normalize->Tile-extract in
+    one kernel — the (b, tile, tile, 3) decode input directly, bit-equal
+    to ``fused_preprocess`` + ``tiling.extract_tiles`` at ``offsets``."""
+    interpret = jax.default_backend() != "tpu"
+    return _fused_tile_preprocess(raw, offsets, resize=resize, crop=crop,
+                                  tile=tile, mean=mean, std=std,
+                                  interpret=interpret)
 
 
 def rs_decode(bits, *, code=None):

@@ -52,6 +52,20 @@ def fused_preprocess_ref(raw, *, resize: int, crop: int,
     return (x - jnp.asarray(mean)) / jnp.asarray(std)
 
 
+def fused_tile_preprocess_ref(raw, offsets, *, resize: int, crop: int,
+                              tile: int, mean=None, std=None):
+    """Oracle for the tile-first ingest kernel: full staged preprocess
+    followed by per-image tile extraction at ``offsets``."""
+    full = fused_preprocess_ref(raw, resize=resize, crop=crop, mean=mean,
+                                std=std)
+
+    def one(img, off):
+        return jax.lax.dynamic_slice(
+            img, (off[0], off[1], 0), (tile, tile, img.shape[-1]))
+
+    return jax.vmap(one)(full, jnp.asarray(offsets, jnp.int32))
+
+
 # ---------------------------------------------------------------------------
 # batched GF(2^m) Reed-Solomon syndrome/decode helper
 # ---------------------------------------------------------------------------

@@ -79,16 +79,19 @@ class DetectionService:
 
     # -- Algorithm 1: warm-up profiling + adaptive allocation -------------
     def warmup(self, sample_raw):
+        """Profile the pipeline's actual stage functions (tile-first
+        ingest produces the decode input directly; staged ingest the
+        full preprocessed image) and run Algorithm 1."""
         cfg = self.det_cfg
-        pre = allocator.profile_stage(
-            lambda b: jax.block_until_ready(self.pipe._preprocess(b)),
-            sample_raw, name="ingest")
-        x = self.pipe._preprocess(sample_raw)
         key = jax.random.key(0)
+        pre = allocator.profile_stage(
+            lambda b: jax.block_until_ready(self.pipe._ingest(b, key)),
+            sample_raw, name="ingest")
+        x = self.pipe._ingest(sample_raw, key)
         dec = allocator.profile_stage(
-            lambda b: jax.block_until_ready(self.pipe._decode(b, key)),
+            lambda b: jax.block_until_ready(self.pipe._decode_x(b, key)),
             x, name="decode")
-        logits = self.pipe._decode(x, key)
+        logits = self.pipe._decode_x(x, key)
         bits = np.asarray((logits > 0).astype(jnp.int32))
 
         def rs_stage(bb):
@@ -187,6 +190,24 @@ class DetectionService:
             allocation=None, lanes=None, lane_loads=None)
 
 
+def enable_compilation_cache(path: str, *, min_entry_bytes: int = 0,
+                             min_compile_secs: float = 0.0) -> bool:
+    """Point jax's persistent compilation cache at ``path`` so a service
+    restart reuses every jitted detection graph (ingest/decode/RS and
+    the fused fast path) instead of recompiling — the jit warm-up is the
+    dominant cold-start cost for a serving replica.  Returns False when
+    this jax build has no persistent cache (knob is then a no-op)."""
+    try:
+        jax.config.update("jax_compilation_cache_dir", path)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes",
+                          min_entry_bytes)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                          min_compile_secs)
+        return True
+    except Exception:
+        return False
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--batches", type=int, default=8)
@@ -203,7 +224,18 @@ def main():
                     help="send odd-size batches to exercise padding")
     ap.add_argument("--sharded", action="store_true",
                     help="data-parallel run_batch over all local devices")
+    ap.add_argument("--staged-ingest", action="store_true",
+                    help="disable tile-first ingest (full-image "
+                         "preprocess + tile select in decode)")
+    ap.add_argument("--compilation-cache", default="",
+                    help="directory for jax's persistent compilation "
+                         "cache (reused across service restarts)")
     args = ap.parse_args()
+
+    if args.compilation_cache:
+        on = enable_compilation_cache(args.compilation_cache)
+        print(f"compilation cache: "
+              f"{args.compilation_cache if on else 'unsupported'}")
 
     from repro.core.extractor import init_extractor
     from repro.core.rs.codec import DEFAULT_CODE
@@ -211,7 +243,8 @@ def main():
                             n_bits=DEFAULT_CODE.codeword_bits)
     cfg = DetectionConfig(tile=args.tile, img_size=args.img,
                           resize_src=args.img + args.img // 8,
-                          mode=args.mode, rs_mode=args.rs_mode)
+                          mode=args.mode, rs_mode=args.rs_mode,
+                          tile_first=not args.staged_ingest)
     svc = DetectionService(cfg, params, lanes=args.lanes)
     sample = np.stack([data_lib.synth_image(i, args.img + 32)
                        for i in range(args.batch)])

@@ -2,10 +2,13 @@
 topology (XLA_FLAGS must be set before jax initialises, hence the
 separate process) and checks that the data-parallel sharded
 ``DetectionPipeline.run_batch`` is bit-identical to the single-device
-staged path, including for a ragged batch that needs padding.
+path, including for a ragged batch that needs padding, and that the
+tile-first fused ingest matches the staged full-image path on the
+sharded mesh.
 
 Not named test_*.py on purpose — pytest must not collect it.
 """
+import dataclasses
 import os
 import sys
 from pathlib import Path
@@ -54,6 +57,20 @@ def main():
         # decode is per-image, so sharding must not move the floats either
         assert np.array_equal(out_m["logits"], out_s["logits"]), \
             f"b={b}: logits diverge"
+
+    # tile-first fused ingest == staged full-image ingest on the 4-device
+    # mesh (cfg above runs tile-first by default; rerun staged and compare)
+    assert DetectionPipeline(cfg, params).tile_first
+    raw = rng.integers(0, 256, (8, 64, 64, 3), dtype=np.uint8)
+    key = jax.random.key(11)
+    cfg_staged = dataclasses.replace(cfg, tile_first=False)
+    out_tf = DetectionPipeline(cfg, params).run_batch(
+        raw, mesh=mesh4, key=key)
+    out_st = DetectionPipeline(cfg_staged, params).run_batch(
+        raw, mesh=mesh4, key=key)
+    for f in ("message_bits", "ok", "n_corrected", "logits"):
+        assert np.array_equal(out_tf[f], out_st[f]), \
+            f"sharded tile-first vs staged: {f} diverges"
     print("OK")
 
 

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core.detect import (DetectionConfig, DetectionPipeline,
-                               verify_against_key)
+                               binomial_threshold, verify_against_key)
 from repro.core.extractor import (encoder_forward, extractor_forward,
                                   init_encoder, init_extractor)
 from repro.core.rs.codec import DEFAULT_CODE, rs_encode
@@ -111,6 +111,79 @@ def test_verify_threshold_fpr():
     good = np.tile(key, (10, 1))
     good[:, 0] ^= 1  # one bit wrong
     assert verify_against_key(good, key, fpr=1e-6).all()
+
+
+@pytest.mark.parametrize("n", [48, 60])
+@pytest.mark.parametrize("fpr", [1e-3, 1e-6])
+def test_binomial_threshold_tau(n, fpr):
+    """tau must be the smallest integer with
+    sum_{i >= tau} C(n, i) <= fpr * 2^n (exact integer arithmetic),
+    and verify_against_key must switch exactly at that agreement."""
+    from math import comb
+    tail = 0
+    tau_exp = n + 1
+    for i in range(n, -1, -1):
+        tail += comb(n, i)
+        if tail * (1.0 / fpr) > 2 ** n:  # P[X >= i] > fpr
+            break
+        tau_exp = i
+    assert binomial_threshold(n, fpr) == tau_exp
+    # behavioral check: agreement == tau passes, tau - 1 fails
+    key = np.zeros(n, np.int32)
+    at_tau = np.zeros((1, n), np.int32)
+    at_tau[0, : n - tau_exp] = 1          # agreement exactly tau
+    below = np.zeros((1, n), np.int32)
+    below[0, : n - tau_exp + 1] = 1       # agreement tau - 1
+    assert verify_against_key(at_tau, key, fpr=fpr).all()
+    assert not verify_against_key(below, key, fpr=fpr).any()
+
+
+def test_binomial_threshold_fails_closed_for_short_keys():
+    """When even full agreement can't reach the target FPR (2^-n > fpr)
+    the threshold must reject everything, not accept everything."""
+    assert binomial_threshold(12, 1e-6) == 13
+    key = np.zeros(12, np.int32)
+    perfect = np.zeros((1, 12), np.int32)
+    assert not verify_against_key(perfect, key, fpr=1e-6).any()
+    # sanity: at n=48 full agreement still verifies
+    assert binomial_threshold(48, 1e-6) <= 48
+
+
+def test_tile_first_matches_staged_all_engines(tiny_trained):
+    """The tile-first fused ingest must be bit-identical to the staged
+    full-image path on every execution engine: the fused detect_batch,
+    the lane executor at 1 and 4 lanes, and the sharded run_batch."""
+    params, tcfg, _ = tiny_trained
+    mk = lambda tf: DetectionConfig(
+        tile=16, img_size=32, resize_src=40, mode="qrmark",
+        rs_mode="device", code=tcfg.code, tile_first=tf)
+    rng = np.random.default_rng(3)
+    raw = rng.integers(0, 256, (5, 64, 64, 3), dtype=np.uint8)
+    data = [rng.integers(0, 256, (4, 64, 64, 3), dtype=np.uint8)
+            for _ in range(3)]
+
+    def collect(results):
+        return {k: np.concatenate([r[k] for r in results])
+                for k in ("message_bits", "ok", "logits")}
+
+    outs = {}
+    for tf in (True, False):
+        # one pipeline per variant: detect_batch/run_batch take explicit
+        # keys and run_stream advances _seq identically in both variants,
+        # so every engine sees the same key sequence
+        pipe = DetectionPipeline(mk(tf), params["dec"])
+        assert pipe.tile_first == tf
+        outs[tf] = {
+            "batch": pipe.detect_batch(raw, key=jax.random.key(1)),
+            "sharded": pipe.run_batch(raw, key=jax.random.key(2)),
+            "lanes1": collect(pipe.run_stream(data, lanes=1)["results"]),
+            "lanes4": collect(pipe.run_stream(data, lanes=4)["results"]),
+        }
+    for engine in ("batch", "sharded", "lanes1", "lanes4"):
+        for field in ("message_bits", "ok", "logits"):
+            np.testing.assert_array_equal(
+                outs[True][engine][field], outs[False][engine][field],
+                err_msg=f"{engine}/{field} diverges tile-first vs staged")
 
 
 def test_end_to_end_detection_of_watermarked_images(tiny_trained):
