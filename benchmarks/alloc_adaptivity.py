@@ -39,11 +39,12 @@ def measured_profiles():
     pre = allocator.profile_stage(
         lambda b: jax.block_until_ready(pipe._ingest(b, key)), raw,
         name="pre")
-    x = pipe._ingest(raw, key)
+    x, keys = pipe._ingest(raw, key)
     dec = allocator.profile_stage(
-        lambda b: jax.block_until_ready(pipe._decode_x(b, key)), x,
+        lambda b: jax.block_until_ready(
+            pipe._decode_x(b, keys[: b.shape[0]])), x,
         name="dec")
-    bits = np.asarray((pipe._decode_x(x, key) > 0).astype(np.int32))
+    bits = np.asarray((pipe._decode_x(x, keys) > 0).astype(np.int32))
     t0 = time.perf_counter()
     for r in bits:
         rs_decode(cfg.code, r)

@@ -1,0 +1,153 @@
+"""Fig. 10 (repo-native): unfused vs fused decode, fp32 vs bf16.
+
+After the tile-first ingest cut (fig9) the decode stage — the 7-block
+extractor conv stack + GAP/head + correlation bank — is the dominant
+hot-path cost.  ``kernels.fused_extractor`` runs the whole forward in
+one Pallas launch per tile batch on pre-packed weights, with a bf16 MXU
+compute path.  This benchmark quantifies the three variants:
+
+* ``unfused``    — ``extractor_forward`` as a plain jitted XLA graph
+  (im2col matmuls materialised between every block);
+* ``fused_fp32`` — the kernel on an fp32 pack (bit-identical to
+  unfused by construction — asserted here);
+* ``fused_bf16`` — the kernel on a bf16 pack: bf16 matmul inputs, fp32
+  accumulation and epilogue.
+
+Numbers reported per (tile, batch) config:
+
+* ``flops`` / ``bytes`` — XLA ``cost_analysis()`` of each jitted graph.
+  NB the fused graphs lower to a grid *loop*, whose body cost_analysis
+  counts once — i.e. fused flops are per grid step (= per image), while
+  unfused flops cover the whole batch; ``flops_per_image`` normalises
+  both.  The arithmetic is intentionally identical per image — fusion
+  wins on memory traffic and launches, bf16 on MXU rate;
+* ``mxu_effective_flops_per_image`` — per-image flops scaled by the MXU
+  dtype throughput (bf16 runs the 128x128 systolic array at 2x fp32),
+  the TPU-cost view of the precision policy;
+* ``wall_s`` — measured per call on this host (CPU interpret mode);
+* ``bit_agreement`` (bf16 vs fp32 logit signs) and
+  ``decision_agreement`` (identical RS ``message_bits``/``ok``) on a
+  margin-bearing workload: codewords embedded through the tied
+  spread-spectrum pattern bank, the deployment distribution where bf16
+  error is far from the bit threshold.
+
+Writes ``experiments/bench/BENCH_decode.json`` (perf-trajectory series).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core.extractor import (encoder_forward, extractor_forward,
+                                  init_encoder, init_extractor,
+                                  pack_params)
+from repro.core.rs.codec import DEFAULT_CODE, rs_encode
+from repro.kernels import ops as kops
+
+# (tile, batch); extractor at paper scale: 64 channels x 7 blocks
+CONFIGS = ((64, 8), (32, 16))
+CHANNELS, DEPTH = 64, 7
+
+
+def _workload(tile: int, batch: int):
+    """Watermarked tiles + the extractor that decodes them: encoder and
+    extractor share the spread-spectrum pattern bank, so bit logits
+    carry a real margin (the deployment regime for the bf16 policy)."""
+    from repro.data.pipeline import synth_image
+    code = DEFAULT_CODE
+    enc = init_encoder(jax.random.key(1), n_bits=code.codeword_bits,
+                       channels=8, depth=2, tile=tile)
+    params = init_extractor(jax.random.key(2), n_bits=code.codeword_bits,
+                            channels=CHANNELS, depth=DEPTH, tile=tile,
+                            patterns=enc["patterns"])
+    # weight the correlation path like a trained detector would: the
+    # untrained conv stack is pure noise here, and the benchmark needs
+    # the deployment property (margined logits), not trained accuracy
+    params["corr_scale"] = params["corr_scale"] * 4.0
+    rng = np.random.default_rng(0)
+    msg = rng.integers(0, 2, code.message_bits)
+    cw = jnp.asarray(rs_encode(code, msg))
+    imgs = jnp.asarray(np.stack([synth_image(i, tile)
+                                 for i in range(batch)]),
+                       jnp.float32) / 127.5 - 1.0
+    tiles, _ = encoder_forward(
+        enc, imgs, jnp.broadcast_to(cw, (batch, code.codeword_bits)))
+    return params, tiles, code
+
+
+def main(quick: bool = False):
+    configs = CONFIGS[:1] if quick else CONFIGS
+    iters = 2 if quick else 4
+    rows = []
+    for tile, batch in configs:
+        if quick:
+            batch = min(batch, 4)
+        params, tiles, code = _workload(tile, batch)
+        pk32 = pack_params(params, "fp32")
+        pk16 = pack_params(params, "bf16")
+        unfused = jax.jit(lambda t: extractor_forward(params, t))
+        fused32 = jax.jit(lambda t: kops.fused_extractor(t, pk32))
+        fused16 = jax.jit(lambda t: kops.fused_extractor(t, pk16))
+
+        u_fl, u_by = common.cost_analysis(unfused, tiles)
+        f_fl, f_by = common.cost_analysis(fused32, tiles)
+        h_fl, h_by = common.cost_analysis(fused16, tiles)
+        u_wall = common.timeit(unfused, tiles, iters=iters)
+        f_wall = common.timeit(fused32, tiles, iters=iters)
+        h_wall = common.timeit(fused16, tiles, iters=iters)
+
+        l32 = np.asarray(fused32(tiles))
+        l16 = np.asarray(fused16(tiles))
+        lu = np.asarray(unfused(tiles))
+        assert np.array_equal(l32, lu), \
+            "fused fp32 decode must be bit-identical to extractor_forward"
+        bit_agree = float(((l16 > 0) == (l32 > 0)).mean())
+        dev_rs = jax.jit(lambda b: kops.rs_decode(b, code=code))
+        r32 = dev_rs((jnp.asarray(l32) > 0).astype(jnp.int32))
+        r16 = dev_rs((jnp.asarray(l16) > 0).astype(jnp.int32))
+        decision_agree = float(np.mean(
+            np.all(np.asarray(r32["message_bits"]) ==
+                   np.asarray(r16["message_bits"]), axis=1) &
+            (np.asarray(r32["ok"]) == np.asarray(r16["ok"]))))
+
+        # fused graphs lower to a grid loop: cost_analysis counts the
+        # body (one image) once; normalise both views per image
+        row = {
+            "tile": tile, "batch": batch,
+            "channels": CHANNELS, "depth": DEPTH,
+            "unfused": {"flops": u_fl, "bytes": u_by, "wall_s": u_wall,
+                        "flops_per_image": u_fl / batch},
+            "fused_fp32": {"flops": f_fl, "bytes": f_by,
+                           "wall_s": f_wall, "flops_per_image": f_fl,
+                           "mxu_effective_flops_per_image": f_fl},
+            "fused_bf16": {"flops": h_fl, "bytes": h_by,
+                           "wall_s": h_wall, "flops_per_image": h_fl,
+                           "mxu_effective_flops_per_image": h_fl / 2.0},
+            "flop_reduction_cost_analysis":
+                round(u_fl / f_fl, 2) if f_fl else None,
+            "mxu_effective_flop_reduction_bf16":
+                round((u_fl / batch) / (h_fl / 2.0), 2) if h_fl else None,
+            "wall_speedup_fp32": round(u_wall / f_wall, 2) if f_wall
+            else None,
+            "wall_speedup_bf16": round(u_wall / h_wall, 2) if h_wall
+            else None,
+            "bit_agreement_bf16": round(bit_agree, 5),
+            "decision_agreement_bf16": decision_agree,
+            "fp32_bit_identical": True,
+        }
+        rows.append(row)
+        common.emit(
+            f"fig10/tile{tile}_b{batch}", h_wall,
+            f"wall_speedup_fp32={row['wall_speedup_fp32']}x;"
+            f"wall_speedup_bf16={row['wall_speedup_bf16']}x;"
+            f"flop_reduction={row['flop_reduction_cost_analysis']}x;"
+            f"bit_agree={bit_agree:.4f};"
+            f"decision_agree={decision_agree:.3f}")
+    common.save_json("BENCH_decode", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

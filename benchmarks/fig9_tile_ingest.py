@@ -31,14 +31,6 @@ CONFIGS = ((256, 64, 8), (256, 128, 8), (128, 32, 16))
 STRATEGY = "random_grid"
 
 
-def _cost(fn, *args):
-    c = fn.lower(*args).compile().cost_analysis()
-    if isinstance(c, (list, tuple)):
-        c = c[0] if c else {}
-    return (float(c.get("flops", 0.0)),
-            float(c.get("bytes accessed", 0.0)))
-
-
 def build_ingest_fns(img: int, tile: int):
     resize = img + img // 8
 
@@ -69,8 +61,8 @@ def main(quick: bool = False):
         key = jax.random.key(0)
         staged, tile_first = build_ingest_fns(img, tile)
 
-        s_flops, s_bytes = _cost(staged, raw)
-        t_flops, t_bytes = _cost(tile_first, raw, key)
+        s_flops, s_bytes = common.cost_analysis(staged, raw)
+        t_flops, t_bytes = common.cost_analysis(tile_first, raw, key)
         s_wall = common.timeit(staged, raw, iters=iters)
         t_wall = common.timeit(tile_first, raw, key, iters=iters)
 

@@ -25,6 +25,7 @@ MODULES = [
     ("fig7_latency", "Fig 7: latency vs batch"),
     ("fig8_breakdown", "Fig 8: optimization breakdown"),
     ("fig9_tile_ingest", "Fig 9: staged vs tile-first ingest"),
+    ("fig10_decode", "Fig 10: unfused vs fused decode, fp32 vs bf16"),
     ("alloc_adaptivity", "§3: stream-allocation adaptivity"),
     ("kernel_fusion", "App B.1: preprocess kernel fusion"),
     ("roofline", "§Roofline: dry-run derived terms"),

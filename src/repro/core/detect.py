@@ -24,6 +24,19 @@ full preprocessed image (~4-6x fewer ingest FLOPs at 256^2/64^2,
 ``select_tiles_per_image`` path; both are bit-identical by construction
 (output row i of the interpolation matmul depends only on row i of Ry).
 
+Decode (the qrmark default, ``cfg.fused_decode``) is the fused Pallas
+extractor kernel (``kernels/fused_extractor.py``): the whole forward —
+im2col-matmul conv blocks with fused norm/ReLU epilogues, GAP + head,
+correlation bank — in one kernel launch per tile batch, on weights
+packed once per pipeline build (``extractor.pack_params``).
+``cfg.decode_dtype`` is the precision policy: "fp32" is bit-identical
+to the unfused ``extractor_forward`` graph (they share one body);
+"bf16" computes the matmuls at bf16 with fp32 accumulation — logit
+perturbations ~1e-2, occasionally flipping a zero-margin bit, which RS
+absorbs (one bit = one GF(16) symbol, within the t=1 radius).
+Per-image fold_in keys are derived once per batch, in ingest, and flow
+to decode through the stage payload.
+
 Execution engines, all driving the same jitted stage functions:
 
 * :meth:`DetectionPipeline.detect_batch` — one batch, synchronous (plus
@@ -58,6 +71,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import extractor as extractor_lib
 from repro.core import interleave, lanes as lanes_lib, tiling, transforms
 from repro.core.extractor import extractor_forward
 from repro.core.rs.codec import DEFAULT_CODE, RSCode, rs_decode
@@ -81,6 +95,8 @@ class DetectionConfig:
     rs_mode: str = "device"        # device | cpu_pool | cpu_sync
     fused_preprocess: bool = True
     tile_first: bool = True        # fuse tile selection into ingest
+    fused_decode: bool = True      # Pallas fused-extractor decode kernel
+    decode_dtype: str = "fp32"     # fp32 (bit-exact) | bf16 (MXU compute)
     interleave: bool = True
     rs_threads: int = 32
     lane_budget: int = 8
@@ -139,44 +155,70 @@ class DetectionPipeline:
             raise ValueError(f"unknown pipeline mode {cfg.mode!r}")
         if cfg.rs_mode not in ("device", "cpu_pool", "cpu_sync"):
             raise ValueError(f"unknown rs_mode {cfg.rs_mode!r}")
+        if cfg.decode_dtype not in extractor_lib.DECODE_DTYPES:
+            raise ValueError(f"unknown decode_dtype {cfg.decode_dtype!r}")
         self.tile_first = (cfg.tile_first and cfg.mode == "qrmark"
                            and cfg.fused_preprocess)
+        self.fused_decode = cfg.fused_decode and cfg.mode == "qrmark"
 
-        if cfg.fused_preprocess and cfg.mode == "qrmark":
+        # decode-stage extractor, one fn for every engine: the fused
+        # Pallas kernel on pre-packed params (qrmark; pack once per
+        # pipeline build, dtype = the precision policy) or the unfused
+        # extractor_forward graph (bit-identical to the fp32 kernel —
+        # they share extractor_forward_packed)
+        if self.fused_decode:
             from repro.kernels import ops as kops
-            self._preprocess = jax.jit(
-                lambda raw: kops.fused_preprocess(
-                    raw, resize=cfg.resize_src, crop=cfg.img_size))
+            self.packed_params = extractor_lib.pack_params(
+                self.params, cfg.decode_dtype)
+
+            def extract(tiles):
+                return kops.fused_extractor(tiles, self.packed_params)
         else:
-            self._preprocess = jax.jit(
-                lambda raw: transforms.preprocess_reference(
-                    raw, resize=cfg.resize_src, crop=cfg.img_size))
+            self.packed_params = None
 
-        # tile-first ingest: offsets from the per-image keys (static
-        # geometry only), then one kernel straight to the decode input
-        def ingest_tiles(raw, batch_key):
-            from repro.kernels import ops as kops
+            def extract(tiles):
+                return extractor_forward(self.params, tiles)
+
+        def preprocess(raw):
+            if cfg.fused_preprocess and cfg.mode == "qrmark":
+                from repro.kernels import ops as kops
+                return kops.fused_preprocess(raw, resize=cfg.resize_src,
+                                             crop=cfg.img_size)
+            return transforms.preprocess_reference(
+                raw, resize=cfg.resize_src, crop=cfg.img_size)
+
+        # ingest derives the per-image fold_in keys for the whole batch
+        # — the single place they are computed; decode receives them
+        # through the payload instead of re-deriving (the fold_in vmap
+        # used to live in both the ingest and decode graphs on the
+        # staged path).  Tile-first: offsets from the keys (static
+        # geometry only), then one kernel straight to the decode input.
+        def ingest(raw, batch_key):
             keys = self._image_keys(batch_key, raw.shape[0])
-            offs = tiling.tile_first_offsets(
-                cfg.strategy, keys, img_size=cfg.img_size, tile=cfg.tile)
-            return kops.fused_tile_preprocess(
-                raw, offs, resize=cfg.resize_src, crop=cfg.img_size,
-                tile=cfg.tile)
-
-        self._ingest_tiles = jax.jit(ingest_tiles)
-
-        def decode_stage(images, batch_key):
-            if cfg.mode == "sequential":
-                tiles = images  # full-image decode
+            if self.tile_first:
+                from repro.kernels import ops as kops
+                offs = tiling.tile_first_offsets(
+                    cfg.strategy, keys, img_size=cfg.img_size,
+                    tile=cfg.tile)
+                x = kops.fused_tile_preprocess(
+                    raw, offs, resize=cfg.resize_src, crop=cfg.img_size,
+                    tile=cfg.tile)
             else:
-                keys = self._image_keys(batch_key, images.shape[0])
-                tiles, _ = tiling.select_tiles_per_image(
-                    cfg.strategy, keys, images, cfg.tile)
-            return extractor_forward(self.params, tiles)
+                x = preprocess(raw)
+            return x, keys
 
-        self._decode = jax.jit(decode_stage)
-        self._extract = jax.jit(
-            lambda tiles: extractor_forward(self.params, tiles))
+        self._ingest_jit = jax.jit(ingest)
+
+        def decode_stage(x, keys):
+            if self.tile_first or cfg.mode == "sequential":
+                tiles = x  # tiles from ingest / full-image decode
+            else:
+                tiles, _ = tiling.select_tiles_per_image(
+                    cfg.strategy, keys, x, cfg.tile)
+            return extract(tiles)
+
+        self._decode_jit = jax.jit(decode_stage)
+        self._extract = jax.jit(extract)
         self._bits = jax.jit(
             lambda logits: (logits > 0).astype(jnp.int32))
 
@@ -186,49 +228,40 @@ class DetectionPipeline:
             self._rs_pool = RSCorrectionPool(self.code,
                                              n_threads=cfg.rs_threads)
 
-        # fully fused fast path (qrmark + device RS): one jitted graph
+        # fully fused fast path (qrmark + device RS): one jitted graph.
+        # The raw-batch buffer is donated — ingest is its only reader,
+        # so the runtime can recycle the largest in-flight buffer while
+        # decode/RS still run.  CPU cannot reuse a donated uint8 input
+        # (it would only warn once per compile), so donation is applied
+        # on accelerator backends only.
         if cfg.mode == "qrmark" and cfg.rs_mode == "device":
             dev_decoder = self._device_rs  # one decoder for every engine
 
             def fused(raw, batch_key):
-                if self.tile_first:
-                    tiles = ingest_tiles(raw, batch_key)
-                else:
-                    x = self._preprocess_fn_inline(raw)
-                    keys = self._image_keys(batch_key, x.shape[0])
-                    tiles, _ = tiling.select_tiles_per_image(
-                        cfg.strategy, keys, x, cfg.tile)
-                logits = extractor_forward(self.params, tiles)
+                x, keys = ingest(raw, batch_key)
+                logits = decode_stage(x, keys)
                 bits = (logits > 0).astype(jnp.int32)
                 return dev_decoder(bits), logits
 
-            self._fused = jax.jit(fused)
+            donate = () if jax.default_backend() == "cpu" else (0,)
+            self._fused = jax.jit(fused, donate_argnums=donate)
         else:
             self._fused = None
 
-    def _preprocess_fn_inline(self, raw):
-        cfg = self.cfg
-        if cfg.fused_preprocess and cfg.mode == "qrmark":
-            from repro.kernels import ops as kops
-            return kops.fused_preprocess(raw, resize=cfg.resize_src,
-                                         crop=cfg.img_size)
-        return transforms.preprocess_reference(raw, resize=cfg.resize_src,
-                                               crop=cfg.img_size)
-
     # -- staged compute, shared by detect_batch and run_batch ----------
     def _ingest(self, raw, key):
-        """raw uint8 batch -> decode input: the selected tiles directly
-        (tile-first) or the full preprocessed images (staged)."""
-        if self.tile_first:
-            return self._ingest_tiles(raw, key)
-        return self._preprocess(raw)
+        """raw uint8 batch -> (decode input, per-image keys): the
+        selected tiles directly (tile-first) or the full preprocessed
+        images (staged).  The per-image fold_in keys are derived here,
+        once per batch, and handed to decode."""
+        return self._ingest_jit(raw, key)
 
-    def _decode_x(self, x, key):
-        """decode input -> bit logits (tile selection already folded
-        into ingest on the tile-first path)."""
+    def _decode_x(self, x, keys):
+        """decode input + per-image keys -> bit logits (tile selection
+        already folded into ingest on the tile-first path)."""
         if self.tile_first:
             return self._extract(x)
-        return self._decode(x, key)
+        return self._decode_jit(x, keys)
 
     # -- RS correction, host-side engines ------------------------------
     def _rs_host(self, bits: np.ndarray):
@@ -292,8 +325,8 @@ class DetectionPipeline:
             msg, ok, ncorr = (rs_out["message_bits"], rs_out["ok"],
                               rs_out["n_corrected"])
         else:
-            x = self._ingest(raw_batch, key)
-            logits = self._decode_x(x, key)
+            x, keys = self._ingest(raw_batch, key)
+            logits = self._decode_x(x, keys)
             msg, ok, ncorr = self._rs_correct(self._bits(logits))
         return self._finish(msg, ok, ncorr, logits, b)
 
@@ -326,11 +359,12 @@ class DetectionPipeline:
         depth = 2 if cfg.interleave else 1
 
         def st_ingest(p):
-            p["x"] = self._ingest(jax.device_put(p["raw"]), p["key"])
+            p["x"], p["keys"] = self._ingest(
+                jax.device_put(p["raw"]), p["key"])
             return p
 
         def st_decode(p):
-            p["logits"] = self._decode_x(p["x"], p["key"])
+            p["logits"] = self._decode_x(p["x"], p["keys"])
             return p
 
         def st_rs(p):
@@ -418,8 +452,8 @@ class DetectionPipeline:
             raw_np = np.concatenate(
                 [raw_np, np.repeat(raw_np[-1:], pad, axis=0)])
         x_in = planner.shard_detection_batch(mesh, raw_np)
-        x = self._ingest(x_in, key)
-        logits = self._decode_x(x, key)
+        x, keys = self._ingest(x_in, key)
+        logits = self._decode_x(x, keys)
         bits = self._bits(logits)
         if self.cfg.rs_mode == "device":
             # decode the padded batch (shape-stable jit), slice after

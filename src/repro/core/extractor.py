@@ -96,21 +96,165 @@ def highpass(x):
     return x - blur
 
 
-def extractor_forward(params, tiles):
-    """tiles (b, l, l, 3) in [-1, 1] -> bit logits (b, n_bits)."""
+# -- matmul-form forward: the one body shared by the unfused XLA path
+# -- and the fused Pallas decode kernel (kernels/fused_extractor.py)
+
+DECODE_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+def _shifts3x3(x):
+    """The nine 3x3-tap shifted views of x (b, h, w, c), zero padding,
+    [ky, kx] order — the implicit im2col a SAME 3x3 conv reads."""
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    return [xp[:, dy: dy + h, dx: dx + w, :]
+            for dy in range(3) for dx in range(3)]
+
+
+def conv3x3_mm(x, w2d):
+    """SAME 3x3 conv as nine accumulated MXU matmuls: x (b, h, w, c) x
+    packed weight (9c, cout) -> (b*h*w, cout), fp32 accumulation.
+
+    Tap-accumulated rather than one materialised (b*h*w, 9c) im2col
+    matmul, so the live working set stays activation-sized (the
+    full-image sequential path and training also run this body).  Tap
+    order is static, every tap dot keeps M = b*h*w, and the nine
+    partial sums add elementwise — all batch-stable, which the
+    fused/unfused bit-identity contract depends on."""
+    b, h, w, c = x.shape
+    acc = None
+    for tap, xs in enumerate(_shifts3x3(x)):
+        y = jnp.dot(xs.reshape(b * h * w, c).astype(w2d.dtype),
+                    w2d[tap * c: (tap + 1) * c],
+                    preferred_element_type=jnp.float32)
+        acc = y if acc is None else acc + y
+    return acc
+
+
+def _box3x3(x):
+    """3x3 box blur, zero padding — the mean ``highpass`` subtracts,
+    as the same nine-tap sum the conv path uses (shared, so the
+    kernel's and the unfused graph's blur cannot drift)."""
+    acc = None
+    for xs in _shifts3x3(x):
+        acc = xs if acc is None else acc + xs
+    return acc * (1.0 / 9.0)
+
+
+def pack_params(params, dtype="fp32"):
+    """Extractor params -> the matmul-friendly layout the decode path
+    consumes (built once per pipeline; :func:`extractor_forward_packed`
+    and the Pallas kernel both read this form).
+
+    Matmul operands (block/to_bits/head weights, correlation bank) are
+    stored in the compute ``dtype`` ("fp32" or "bf16" — the MXU input
+    precision); every epilogue term (biases, corr_scale) stays fp32
+    because accumulation and the norm/ReLU epilogue always run in
+    fp32."""
+    cdt = DECODE_DTYPES[dtype] if isinstance(dtype, str) else dtype
+    pk = {
+        "blocks": [{"w": b["w"].reshape(-1, b["w"].shape[-1]).astype(cdt),
+                    "b": b["b"].astype(jnp.float32)}
+                   for b in params["blocks"]],
+        "to_bits": {
+            "w": params["to_bits"]["w"].reshape(
+                -1, params["to_bits"]["w"].shape[-1]).astype(cdt),
+            "b": params["to_bits"]["b"].astype(jnp.float32)},
+        "head": {"w": params["head"]["w"].astype(cdt),
+                 "b": params["head"]["b"].astype(jnp.float32)},
+    }
+    if "corr" in params:
+        n, t = params["corr"].shape[0], params["corr"].shape[1]
+        # (n, t, t, 3) -> (t*t, n, 3): pixel-major so the correlation
+        # reduces over (pixel, channel) with batch-stable shapes
+        pk["corr"] = params["corr"].transpose(1, 2, 0, 3).reshape(
+            t * t, n, 3).astype(cdt)
+        pk["corr_scale"] = params["corr_scale"].astype(jnp.float32)
+    return pk
+
+
+def unpack_params(packed):
+    """Exact inverse of :func:`pack_params` for fp32 packs (bf16 packs
+    round-trip to the bf16-rounded weights)."""
+    cin = 3
+    blocks = []
+    for blk in packed["blocks"]:
+        cout = blk["w"].shape[-1]
+        blocks.append({"w": blk["w"].astype(jnp.float32).reshape(
+            3, 3, cin, cout), "b": blk["b"]})
+        cin = cout
+    nb = packed["to_bits"]["w"].shape[-1]
+    p = {
+        "blocks": blocks,
+        "to_bits": {"w": packed["to_bits"]["w"].astype(
+            jnp.float32).reshape(3, 3, cin, nb),
+            "b": packed["to_bits"]["b"]},
+        "head": {"w": packed["head"]["w"].astype(jnp.float32),
+                 "b": packed["head"]["b"]},
+    }
+    if "corr" in packed:
+        t2, n, _ = packed["corr"].shape
+        t = int(round(t2 ** 0.5))
+        p["corr"] = packed["corr"].astype(jnp.float32).reshape(
+            t, t, n, 3).transpose(2, 0, 1, 3)
+        p["corr_scale"] = packed["corr_scale"]
+    return p
+
+
+def extractor_forward_packed(packed, tiles):
+    """The decode-stage forward on packed params: im2col-as-matmul conv
+    blocks with the channel-norm + ReLU epilogue, GAP + head, and the
+    spread-spectrum correlation path.
+
+    This is THE shared body: ``extractor_forward`` (the unfused XLA
+    graph) and the Pallas kernel grid step (block shape (1, l, l, 3))
+    both run it verbatim, so the fused/unfused bit-identity contract
+    cannot silently drift — and every op is *batch-stable* (a size-b
+    batch computes row i exactly as a size-1 batch would):
+
+    * conv matmuls keep M = b*l*l (slice-stable GEMM shapes), with the
+      nine taps accumulated in static order (``conv3x3_mm``);
+    * GAP is a (1, 2)-axis mean with the batch dim leading;
+    * head and correlation contract via broadcast-multiply + reduce
+      instead of M=b GEMV/GEMM dots, whose K-accumulation order is
+      batch-dependent on some backends (they are a negligible slice of
+      decode FLOPs).
+
+    Matmul inputs are cast to the packed compute dtype; accumulation
+    (``preferred_element_type``), the highpass (elementwise VPU work)
+    and the epilogue stay fp32.
+    """
+    b, l = tiles.shape[0], tiles.shape[1]
+    cdt = packed["blocks"][0]["w"].dtype
     x = tiles
-    for blk in params["blocks"]:
-        x = _block(blk, x)
-    x = conv2d(x, params["to_bits"]["w"]) + params["to_bits"]["b"]
-    x = x.mean(axis=(1, 2))  # GAP
-    logits = x @ params["head"]["w"] + params["head"]["b"]
-    if "corr" in params and tiles.shape[1:3] == params["corr"].shape[1:3]:
+    for blk in packed["blocks"]:
+        y = conv3x3_mm(x, blk["w"])
+        x = jax.nn.relu(channel_norm(
+            y.reshape(b, l, l, -1) + blk["b"]))
+    y = conv3x3_mm(x, packed["to_bits"]["w"])
+    y = y.reshape(b, l, l, -1) + packed["to_bits"]["b"]
+    g = y.mean(axis=(1, 2))  # GAP
+    logits = (g.astype(cdt)[:, :, None] * packed["head"]["w"][None]
+              ).astype(jnp.float32).sum(axis=1) + packed["head"]["b"]
+    if "corr" in packed and packed["corr"].shape[0] == l * l:
         # correlation path only at the bank's native tile size (the conv
         # path alone handles other sizes, e.g. full-image baseline mode)
-        hp = highpass(tiles)
-        corr = jnp.einsum("bhwc,nhwc->bn", hp, params["corr"])
-        logits = logits + corr * params["corr_scale"]
+        hp = (tiles - _box3x3(tiles)).reshape(b, l * l, 1, 3)
+        corr = (hp.astype(cdt) * packed["corr"][None]
+                ).astype(jnp.float32).sum(axis=(1, 3))
+        logits = logits + corr * packed["corr_scale"]
     return logits
+
+
+def extractor_forward(params, tiles):
+    """tiles (b, l, l, 3) in [-1, 1] -> bit logits (b, n_bits).
+
+    Same math as the original conv formulation (semantic oracle:
+    ``kernels.ref.fused_extractor_ref``), expressed through the shared
+    matmul body so the fused fp32 kernel is bit-identical to this
+    unfused path by construction.  Packing inside jit is free (reshapes
+    and casts constant-fold)."""
+    return extractor_forward_packed(pack_params(params), tiles)
 
 
 # ---------------------------------------------------------------------------

@@ -175,3 +175,10 @@ class StragglerMonitor:
     def mark_retried(self, task_id: int):
         self._retries[task_id] = self._retries.get(task_id, 0) + 1
         self._started[task_id] = time.perf_counter()
+
+    @property
+    def retry_count(self) -> int:
+        """Total speculative re-executions recorded via
+        :meth:`mark_retried` — the number a service report should
+        surface as ``straggler_retries``."""
+        return sum(self._retries.values())

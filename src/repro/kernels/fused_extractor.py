@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: the fused extractor decode stage.
+
+After PR 2's tile-first ingest, decode — ``extractor_forward``'s 7-block
+conv stack, GAP + head, and the spread-spectrum correlation bank — is
+the last hot-path stage still running as an unfused XLA graph at full
+precision: every conv block round-trips its (l, l, C) activations
+through HBM, and QRMark §5.2 identifies exactly this stage as the
+GPU-intensive bottleneck that gets extra streams.  This kernel runs the
+*whole* forward in one ``pallas_call`` per tile batch:
+
+* each 3x3 conv block is an implicit-im2col MATMUL — nine tap-shifted
+  (l*l, C) x (C, C') MXU dots accumulated in static order against the
+  pre-packed (9*C, C') weight — with the bias + channel-norm + ReLU
+  epilogue fused into the same grid step, so inter-block activations
+  never leave VMEM (and no 9x patch matrix is ever materialised);
+* the GAP + head and the correlation path (nine-tap box highpass +
+  pattern-bank contraction) ride in the same step;
+* a precision policy picks the MXU input dtype: fp32 packs are
+  bit-identical to the unfused ``extractor_forward`` (oracle parity by
+  construction — both run ``extractor_forward_packed`` verbatim), bf16
+  packs compute the matmuls at bf16 (2x MXU throughput, half the weight
+  traffic) with fp32 accumulation and a fully fp32 epilogue.
+
+One grid step processes one image, mirroring the ingest kernels: the
+weights are broadcast to every step and the per-step VMEM working set
+stays activation-sized — padded activation + tap slice + accumulator,
+~3-4 MB fp32 (~half in bf16) at l=64, C=64, comfortably inside the
+~16 MB budget.  Per-step results are written straight to the
+(b, n_bits) logits output.
+
+Bit-identity depends on every op in the shared body being batch-stable
+(see ``extractor_forward_packed``): the kernel computes image i with
+bb=1 shapes, the unfused path with bb=b shapes, and the body is written
+so both accumulate identically.  interpret=True executes on CPU (this
+container); interpret=False is the TPU target.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.extractor import extractor_forward_packed
+
+
+def _full_spec(shape):
+    """BlockSpec broadcasting one whole (weight) array to every step."""
+    nd = len(shape)
+    return pl.BlockSpec(shape, lambda i, _nd=nd: (0,) * _nd)
+
+
+def fused_extractor(tiles, packed, *, interpret: bool = True):
+    """tiles (b, l, l, 3) f32 + packed extractor params -> (b, n_bits)
+    f32 logits.
+
+    ``packed`` is ``extractor.pack_params(params, dtype)`` — built once
+    per pipeline, reused across every batch; its leaf dtypes select the
+    fp32 / bf16 compute path.  Not jitted here: callers jit around it.
+    """
+    b, l = tiles.shape[0], tiles.shape[1]
+    n_bits = packed["head"]["b"].shape[0]
+    leaves, treedef = jax.tree.flatten(packed)
+
+    def kernel(img_ref, *refs):
+        param_refs, out_ref = refs[:-1], refs[-1]
+        pk = jax.tree.unflatten(treedef, [r[...] for r in param_refs])
+        out_ref[...] = extractor_forward_packed(pk, img_ref[...])
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, l, l, 3), lambda i: (i, 0, 0, 0))] +
+                 [_full_spec(x.shape) for x in leaves],
+        out_specs=pl.BlockSpec((1, n_bits), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_bits), jnp.float32),
+        interpret=interpret,
+    )(tiles, *leaves)

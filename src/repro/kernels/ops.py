@@ -34,6 +34,17 @@ def fused_tile_preprocess(raw, offsets, *, resize: int = 256,
                                   interpret=interpret)
 
 
+def fused_extractor(tiles, packed):
+    """Fused decode: the whole extractor forward (im2col-matmul conv
+    blocks + GAP/head + correlation bank) in one kernel launch per tile
+    batch.  ``packed`` = ``extractor.pack_params(params, dtype)``; its
+    dtype selects the fp32 (bit-exact vs ``extractor_forward``) or bf16
+    (MXU compute, fp32 accumulation) path."""
+    from repro.kernels.fused_extractor import fused_extractor as _fx
+    interpret = jax.default_backend() != "tpu"
+    return _fx(tiles, packed, interpret=interpret)
+
+
 def rs_decode(bits, *, code=None):
     """Batched Berlekamp-Welch decode (Pallas kernel for the default
     (15,12) GF(16) code; jax_rs fallback otherwise)."""

@@ -100,3 +100,40 @@ def conv_block_ref(x, w, b, eps: float = 1e-5):
     var = y.var(axis=-1, keepdims=True)
     y = (y - mu) * jax.lax.rsqrt(var + eps)
     return jax.nn.relu(y)
+
+
+# ---------------------------------------------------------------------------
+# fused extractor decode: conv stack + GAP/head + correlation bank
+# ---------------------------------------------------------------------------
+
+
+def fused_extractor_ref(params, tiles):
+    """Semantic oracle for ``kernels.fused_extractor``: the extractor
+    forward in the ORIGINAL conv/einsum formulation (lax.conv blocks,
+    dense head, depthwise-blur highpass + pattern-bank einsum).
+
+    The kernel and ``extractor_forward`` share the matmul-form body and
+    are bitwise identical to each other; this oracle pins both to the
+    pre-fusion math within float tolerance (the formulations reorder
+    float accumulation, so equality is allclose, not bitwise)."""
+    x = tiles
+    for blk in params["blocks"]:
+        x = conv_block_ref(x, blk["w"], blk["b"])
+    x = jax.lax.conv_general_dilated(
+        x, params["to_bits"]["w"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = x + params["to_bits"]["b"]
+    x = x.mean(axis=(1, 2))
+    logits = x @ params["head"]["w"] + params["head"]["b"]
+    if "corr" in params and tiles.shape[1:3] == params["corr"].shape[1:3]:
+        c = tiles.shape[-1]
+        k = jnp.tile(jnp.ones((3, 3, 1, 1), jnp.float32) / 9.0,
+                     (1, 1, 1, c))
+        blur = jax.lax.conv_general_dilated(
+            tiles, k, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=c)
+        hp = tiles - blur
+        corr = jnp.einsum("bhwc,nhwc->bn", hp, params["corr"])
+        logits = logits + corr * params["corr_scale"]
+    return logits

@@ -81,27 +81,30 @@ class DetectionService:
     def warmup(self, sample_raw):
         """Profile the pipeline's actual stage functions (tile-first
         ingest produces the decode input directly; staged ingest the
-        full preprocessed image) and run Algorithm 1."""
+        full preprocessed image; decode is the fused Pallas kernel when
+        configured) and run Algorithm 1.
+
+        Every stage is profiled through the engine the pipeline will
+        really run — in particular RS goes through ``_rs_correct`` (the
+        on-device batched decoder when ``rs_mode="device"``, the CPU
+        pool or sync loop otherwise), not a host-side reference loop, so
+        the lane allocation matches what serving executes."""
         cfg = self.det_cfg
         key = jax.random.key(0)
         pre = allocator.profile_stage(
             lambda b: jax.block_until_ready(self.pipe._ingest(b, key)),
             sample_raw, name="ingest")
-        x = self.pipe._ingest(sample_raw, key)
+        x, keys = self.pipe._ingest(sample_raw, key)
         dec = allocator.profile_stage(
-            lambda b: jax.block_until_ready(self.pipe._decode_x(b, key)),
+            lambda b: jax.block_until_ready(
+                self.pipe._decode_x(b, keys[: b.shape[0]])),
             x, name="decode")
-        logits = self.pipe._decode_x(x, key)
-        bits = np.asarray((logits > 0).astype(jnp.int32))
-
-        def rs_stage(bb):
-            from repro.core.rs.codec import rs_decode
-            return [rs_decode(cfg.code, r) for r in np.asarray(bb)]
-
-        t0 = time.perf_counter()
-        rs_stage(bits)
-        rs_t = (time.perf_counter() - t0) / bits.shape[0]
-        rs_prof = allocator.StageProfile("rs", rs_t, 64.0, 1e-5)
+        logits = self.pipe._decode_x(x, keys)
+        bits = self.pipe._bits(logits)
+        rs_sample = bits if cfg.rs_mode == "device" else np.asarray(bits)
+        rs_prof = allocator.profile_stage(
+            lambda bb: jax.block_until_ready(self.pipe._rs_correct(bb)),
+            rs_sample, name="rs")
         profiles = [pre, dec, rs_prof]
         self.allocation = allocator.adaptive_allocation(
             profiles, global_batch=sample_raw.shape[0],
@@ -121,7 +124,7 @@ class DetectionService:
         into LPT-placed mini-batch tasks first (Algorithm 2); the task
         slices then flow through the executor as the work stream."""
         mon = sched_lib.StragglerMonitor()
-        retries = 0
+        lane_loads: Optional[List[float]] = None
         work: List[Tuple[np.ndarray, int]] = []  # (padded slice, true b)
         for raw in batches:
             raw = np.asarray(raw)
@@ -135,6 +138,12 @@ class DetectionService:
                 sched = sched_lib.lpt_schedule(
                     tasks, n_lanes=max(n_lanes, 1), balance_slack=0.25,
                     mem_cap=self.mem_cap, b_min=1, global_batch=b)
+                # accumulate the LPT per-lane predicted loads across
+                # request batches — the report's lane_loads field
+                if lane_loads is None:
+                    lane_loads = [0.0] * len(sched.loads)
+                lane_loads = [a + l for a, l in zip(lane_loads,
+                                                    sched.loads)]
                 off = 0
                 for lane in sched.lanes:
                     for task in lane:
@@ -161,15 +170,19 @@ class DetectionService:
                 if getattr(v, "ndim", 0) >= 1:
                     res[k] = v[:true_b]
             n_img += true_b
-            if not mon.complete(tid):
-                retries += 1
+            mon.complete(tid)
         return ServiceReport(
             images=n_img, wall_s=wall,
             throughput_ips=n_img / wall if wall else 0.0,
             allocation=(self.allocation.streams if self.allocation
                         else None),
-            lanes=out.get("lanes"), lane_loads=None,
-            straggler_retries=retries)
+            lanes=out.get("lanes"),
+            lane_loads=([round(l, 6) for l in lane_loads]
+                        if lane_loads else None),
+            # speculative re-executions the monitor actually recorded
+            # (mark_retried) — not sink-side duplicate completions,
+            # which the in-order executor can never produce
+            straggler_retries=mon.retry_count)
 
     # -- data-parallel sharded path ----------------------------------------
     def serve_sharded(self, batches: Iterable) -> ServiceReport:
@@ -227,6 +240,15 @@ def main():
     ap.add_argument("--staged-ingest", action="store_true",
                     help="disable tile-first ingest (full-image "
                          "preprocess + tile select in decode)")
+    ap.add_argument("--decode-dtype", default="fp32",
+                    choices=("fp32", "bf16"),
+                    help="fused-decode precision policy: fp32 = "
+                         "bit-exact vs the unfused extractor, bf16 = "
+                         "MXU compute with fp32 accumulation")
+    ap.add_argument("--unfused-decode", action="store_true",
+                    help="disable the fused Pallas extractor kernel "
+                         "(decode runs the unfused XLA graph; warmup "
+                         "then profiles and allocates lanes for that)")
     ap.add_argument("--compilation-cache", default="",
                     help="directory for jax's persistent compilation "
                          "cache (reused across service restarts)")
@@ -244,7 +266,9 @@ def main():
     cfg = DetectionConfig(tile=args.tile, img_size=args.img,
                           resize_src=args.img + args.img // 8,
                           mode=args.mode, rs_mode=args.rs_mode,
-                          tile_first=not args.staged_ingest)
+                          tile_first=not args.staged_ingest,
+                          fused_decode=not args.unfused_decode,
+                          decode_dtype=args.decode_dtype)
     svc = DetectionService(cfg, params, lanes=args.lanes)
     sample = np.stack([data_lib.synth_image(i, args.img + 32)
                        for i in range(args.batch)])
