@@ -26,6 +26,8 @@ MODULES = [
     ("fig8_breakdown", "Fig 8: optimization breakdown"),
     ("fig9_tile_ingest", "Fig 9: staged vs tile-first ingest"),
     ("fig10_decode", "Fig 10: unfused vs fused decode, fp32 vs bf16"),
+    ("fig11_online_serving",
+     "Fig 11: online serving — offered load vs latency percentiles"),
     ("alloc_adaptivity", "§3: stream-allocation adaptivity"),
     ("kernel_fusion", "App B.1: preprocess kernel fusion"),
     ("roofline", "§Roofline: dry-run derived terms"),

@@ -34,10 +34,14 @@ to the unfused ``extractor_forward`` graph (they share one body);
 "bf16" computes the matmuls at bf16 with fp32 accumulation — logit
 perturbations ~1e-2, occasionally flipping a zero-margin bit, which RS
 absorbs (one bit = one GF(16) symbol, within the t=1 radius).
-Per-image fold_in keys are derived once per batch, in ingest, and flow
-to decode through the stage payload.
+Per-image fold_in keys are derived once per batch (offline) or once per
+request (online) by ``StageRegistry.image_keys`` and flow to every
+stage through the payload as explicit inputs.
 
-Execution engines, all driving the same jitted stage functions:
+Execution engines, all deriving their compute from ONE
+:class:`repro.core.stages.StageRegistry` (the single definition of the
+ingest/decode/RS stage functions, the fused fast path, and the RNG-key
+discipline — nothing is restated here):
 
 * :meth:`DetectionPipeline.detect_batch` — one batch, synchronous (plus
   a fully-fused single-jit fast path for qrmark + device RS);
@@ -46,7 +50,10 @@ Execution engines, all driving the same jitted stage functions:
   §6.2 allocator), bounded queues, multiple mini-batches in flight;
 * :meth:`DetectionPipeline.run_batch` — data-parallel sharding of one
   (possibly ragged) batch across all local devices via a 1-D
-  ``NamedSharding`` mesh.
+  ``NamedSharding`` mesh;
+* :class:`repro.serving.server.DetectionServer` — the online
+  request-level runtime: the same stage graph on a persistent
+  service-mode executor behind a dynamic micro-batcher.
 
 Stage handoff is zero-copy: payloads stay device arrays between lanes
 (bits are thresholded on device, ``rs_mode="device"`` feeds them
@@ -63,25 +70,20 @@ The pipeline object is the unit the benchmarks (Fig. 6/7/8/9) drive.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import threading
 import time
 from typing import Callable, Dict, Iterable, List, Optional, Union
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import extractor as extractor_lib
-from repro.core import interleave, lanes as lanes_lib, tiling, transforms
-from repro.core.extractor import extractor_forward
-from repro.core.rs.codec import DEFAULT_CODE, RSCode, rs_decode
-from repro.core.rs import jax_rs
-from repro.core.rs.cpu_pool import RSCorrectionPool
-
-STAGE_NAMES = ("ingest", "decode", "rs")
-
-# the code the Pallas Berlekamp-Welch kernel is specialised for
-_PALLAS_RS_CODE = (4, 15, 12)  # (m, n, k)
+from repro.core import interleave, lanes as lanes_lib
+# make_device_rs / STAGE_NAMES moved to repro.core.stages; re-exported
+# here for callers that import them from the pipeline module
+from repro.core.stages import (STAGE_NAMES, StageRegistry,  # noqa: F401
+                               make_device_rs)
+from repro.core.rs.codec import DEFAULT_CODE, RSCode
 
 
 @dataclasses.dataclass
@@ -103,26 +105,13 @@ class DetectionConfig:
     seed: int = 0
 
 
-def make_device_rs(code: RSCode) -> Callable:
-    """The on-device batched RS engine: the Pallas Berlekamp-Welch
-    kernel for the code it is specialised for, ``jax_rs`` otherwise.
-    Jit-able and safe to inline into a larger jitted graph — every
-    engine (fused fast path, lane executor, sharded run_batch) must use
-    the same decoder so failure tie-breaking never diverges."""
-    if (code.m, code.n, code.k) == _PALLAS_RS_CODE:
-        from repro.kernels import ops as kops
-
-        def decode(bits):
-            return kops.rs_decode(bits, code=code)
-
-        # jitted so sharded inputs (run_batch) go through the SPMD
-        # partitioner instead of eager multi-device dispatch
-        return jax.jit(decode)
-    return jax_rs.make_batch_decoder(code)
-
-
 class DetectionPipeline:
-    """Drives (ingest -> tile+decode -> RS) over image streams."""
+    """Drives (ingest -> tile+decode -> RS) over image streams.
+
+    The pipeline is a thin engine layer: all stage compute, the fused
+    fast path, the RS engines, and the key discipline live in its
+    :class:`~repro.core.stages.StageRegistry` (``self.stages``), which
+    the online :class:`~repro.serving.server.DetectionServer` shares."""
 
     def __init__(self, cfg: DetectionConfig, extractor_params,
                  ground_truth_bits: Optional[np.ndarray] = None):
@@ -130,123 +119,17 @@ class DetectionPipeline:
         self.params = extractor_params
         self.gt = ground_truth_bits
         self.code = cfg.code
-        self._base_key = jax.random.key(cfg.seed)
-        self._rs_pool: Optional[RSCorrectionPool] = None
-        self._device_rs = None
+        self.stages = StageRegistry(cfg, extractor_params)
+        self.tile_first = self.stages.tile_first
+        self.fused_decode = self.stages.fused_decode
+        self.packed_params = self.stages.packed_params
         self._seq = 0                 # batch counter (keys)
-        self._pool_seq = 0            # RS-pool job id counter
-        self._pool_lock = threading.Lock()
         self._stats_lock = threading.Lock()  # _finish runs on rs lanes
         self.stats: Dict[str, float] = {"batches": 0, "images": 0}
-        self._build()
 
     # ------------------------------------------------------------------
     def _batch_key(self, seq: int):
-        return jax.random.fold_in(self._base_key, seq)
-
-    @staticmethod
-    def _image_keys(batch_key, b: int):
-        return jax.vmap(lambda i: jax.random.fold_in(batch_key, i))(
-            jnp.arange(b))
-
-    def _build(self):
-        cfg = self.cfg
-        if cfg.mode not in ("sequential", "tiled", "qrmark"):
-            raise ValueError(f"unknown pipeline mode {cfg.mode!r}")
-        if cfg.rs_mode not in ("device", "cpu_pool", "cpu_sync"):
-            raise ValueError(f"unknown rs_mode {cfg.rs_mode!r}")
-        if cfg.decode_dtype not in extractor_lib.DECODE_DTYPES:
-            raise ValueError(f"unknown decode_dtype {cfg.decode_dtype!r}")
-        self.tile_first = (cfg.tile_first and cfg.mode == "qrmark"
-                           and cfg.fused_preprocess)
-        self.fused_decode = cfg.fused_decode and cfg.mode == "qrmark"
-
-        # decode-stage extractor, one fn for every engine: the fused
-        # Pallas kernel on pre-packed params (qrmark; pack once per
-        # pipeline build, dtype = the precision policy) or the unfused
-        # extractor_forward graph (bit-identical to the fp32 kernel —
-        # they share extractor_forward_packed)
-        if self.fused_decode:
-            from repro.kernels import ops as kops
-            self.packed_params = extractor_lib.pack_params(
-                self.params, cfg.decode_dtype)
-
-            def extract(tiles):
-                return kops.fused_extractor(tiles, self.packed_params)
-        else:
-            self.packed_params = None
-
-            def extract(tiles):
-                return extractor_forward(self.params, tiles)
-
-        def preprocess(raw):
-            if cfg.fused_preprocess and cfg.mode == "qrmark":
-                from repro.kernels import ops as kops
-                return kops.fused_preprocess(raw, resize=cfg.resize_src,
-                                             crop=cfg.img_size)
-            return transforms.preprocess_reference(
-                raw, resize=cfg.resize_src, crop=cfg.img_size)
-
-        # ingest derives the per-image fold_in keys for the whole batch
-        # — the single place they are computed; decode receives them
-        # through the payload instead of re-deriving (the fold_in vmap
-        # used to live in both the ingest and decode graphs on the
-        # staged path).  Tile-first: offsets from the keys (static
-        # geometry only), then one kernel straight to the decode input.
-        def ingest(raw, batch_key):
-            keys = self._image_keys(batch_key, raw.shape[0])
-            if self.tile_first:
-                from repro.kernels import ops as kops
-                offs = tiling.tile_first_offsets(
-                    cfg.strategy, keys, img_size=cfg.img_size,
-                    tile=cfg.tile)
-                x = kops.fused_tile_preprocess(
-                    raw, offs, resize=cfg.resize_src, crop=cfg.img_size,
-                    tile=cfg.tile)
-            else:
-                x = preprocess(raw)
-            return x, keys
-
-        self._ingest_jit = jax.jit(ingest)
-
-        def decode_stage(x, keys):
-            if self.tile_first or cfg.mode == "sequential":
-                tiles = x  # tiles from ingest / full-image decode
-            else:
-                tiles, _ = tiling.select_tiles_per_image(
-                    cfg.strategy, keys, x, cfg.tile)
-            return extract(tiles)
-
-        self._decode_jit = jax.jit(decode_stage)
-        self._extract = jax.jit(extract)
-        self._bits = jax.jit(
-            lambda logits: (logits > 0).astype(jnp.int32))
-
-        if cfg.rs_mode == "device":
-            self._device_rs = make_device_rs(self.code)
-        elif cfg.rs_mode == "cpu_pool":
-            self._rs_pool = RSCorrectionPool(self.code,
-                                             n_threads=cfg.rs_threads)
-
-        # fully fused fast path (qrmark + device RS): one jitted graph.
-        # The raw-batch buffer is donated — ingest is its only reader,
-        # so the runtime can recycle the largest in-flight buffer while
-        # decode/RS still run.  CPU cannot reuse a donated uint8 input
-        # (it would only warn once per compile), so donation is applied
-        # on accelerator backends only.
-        if cfg.mode == "qrmark" and cfg.rs_mode == "device":
-            dev_decoder = self._device_rs  # one decoder for every engine
-
-            def fused(raw, batch_key):
-                x, keys = ingest(raw, batch_key)
-                logits = decode_stage(x, keys)
-                bits = (logits > 0).astype(jnp.int32)
-                return dev_decoder(bits), logits
-
-            donate = () if jax.default_backend() == "cpu" else (0,)
-            self._fused = jax.jit(fused, donate_argnums=donate)
-        else:
-            self._fused = None
+        return self.stages.batch_key(seq)
 
     # -- staged compute, shared by detect_batch and run_batch ----------
     def _ingest(self, raw, key):
@@ -254,49 +137,20 @@ class DetectionPipeline:
         selected tiles directly (tile-first) or the full preprocessed
         images (staged).  The per-image fold_in keys are derived here,
         once per batch, and handed to decode."""
-        return self._ingest_jit(raw, key)
+        keys = self.stages.image_keys(key, raw.shape[0])
+        return self.stages.ingest_keyed(raw, keys), keys
 
     def _decode_x(self, x, keys):
         """decode input + per-image keys -> bit logits (tile selection
         already folded into ingest on the tile-first path)."""
-        if self.tile_first:
-            return self._extract(x)
-        return self._decode_jit(x, keys)
+        return self.stages.decode_keyed(x, keys)
 
-    # -- RS correction, host-side engines ------------------------------
-    def _rs_host(self, bits: np.ndarray):
-        """(msg, ok, ncorr) via the configured host RS engine."""
-        cfg = self.cfg
-        b = bits.shape[0]
-        msg = np.zeros((b, self.code.message_bits), np.int32)
-        ok = np.zeros((b,), bool)
-        ncorr = np.zeros((b,), np.int32)
-        if cfg.rs_mode == "cpu_pool":
-            with self._pool_lock:
-                base = self._pool_seq
-                self._pool_seq += b
-            self._rs_pool.submit_batch(bits, base)
-            for i, (mi, oki) in enumerate(
-                    self._rs_pool.drain(range(base, base + b))):
-                msg[i], ok[i] = mi[: self.code.message_bits], oki
-        else:  # cpu_sync
-            for i in range(b):
-                res = rs_decode(self.code, bits[i])
-                msg[i] = res.message_bits
-                ok[i] = res.ok
-                ncorr[i] = res.n_corrected
-        return msg, ok, ncorr
+    def _bits(self, logits):
+        return self.stages.bits(logits)
 
     def _rs_correct(self, bits):
-        """(msg, ok, ncorr) via the configured RS engine.  ``bits`` stays
-        a device array end-to-end on the device path (zero-copy handoff);
-        host engines pull it to numpy here, at their host boundary."""
-        if self.cfg.rs_mode == "device":
-            rs_out = self._device_rs(bits if isinstance(bits, jax.Array)
-                                     else jnp.asarray(bits))
-            return (rs_out["message_bits"], rs_out["ok"],
-                    rs_out["n_corrected"])
-        return self._rs_host(np.asarray(bits))
+        """(msg, ok, ncorr) via the registry's configured RS engine."""
+        return self.stages.rs_correct(bits)
 
     def _finish(self, msg, ok, ncorr, logits, b) -> Dict[str, np.ndarray]:
         """The sink: the single place device arrays become numpy."""
@@ -315,13 +169,13 @@ class DetectionPipeline:
     # ------------------------------------------------------------------
     def detect_batch(self, raw_batch, *, key=None) -> Dict[str, np.ndarray]:
         """Synchronous detection of one raw uint8 image batch."""
-        cfg = self.cfg
         b = raw_batch.shape[0]
         if key is None:
             key = self._batch_key(self._seq)
             self._seq += 1
-        if self._fused is not None:
-            (rs_out, logits) = self._fused(raw_batch, key)
+        if self.stages.fused_keyed is not None:
+            keys = self.stages.image_keys(key, b)
+            (rs_out, logits) = self.stages.fused_keyed(raw_batch, keys)
             msg, ok, ncorr = (rs_out["message_bits"], rs_out["ok"],
                               rs_out["n_corrected"])
         else:
@@ -344,50 +198,38 @@ class DetectionPipeline:
         rs = min(4, max(1, budget - decode - 1))
         return {"ingest": 1, "decode": decode, "rs": rs}
 
+    def _finish_payload(self, p: dict) -> Dict[str, np.ndarray]:
+        """Registry stage-graph sink for the offline engines."""
+        logits = p["logits"]
+        return self._finish(p["msg"], p["ok"], p["ncorr"], logits,
+                            logits.shape[0])
+
     def build_stages(self, lanes: Optional[Dict[str, int]] = None
                      ) -> List[lanes_lib.Stage]:
-        """The detection stage graph for the lane executor.
-
-        Payloads are dicts carrying ``raw`` -> ``x`` -> ``logits`` ->
-        result; ``key`` is pre-derived by the feeder so stage functions
-        are pure and any lane count is bit-identical to serial.  Between
-        lanes everything stays a device array (jitted stage fns return
-        futures; numpy conversion happens only in the :meth:`_finish`
-        sink)."""
-        cfg = self.cfg
+        """The detection stage graph for the lane executor — the
+        registry's single payload-stage definition with :meth:`_finish`
+        as the sink (payloads carry pre-derived per-image ``keys``, so
+        stage functions are pure and any lane count is bit-identical to
+        serial; see :meth:`StageRegistry.build_stages`)."""
         ln = {**self.default_lanes(), **(lanes or {})}
-        depth = 2 if cfg.interleave else 1
-
-        def st_ingest(p):
-            p["x"], p["keys"] = self._ingest(
-                jax.device_put(p["raw"]), p["key"])
-            return p
-
-        def st_decode(p):
-            p["logits"] = self._decode_x(p["x"], p["keys"])
-            return p
-
-        def st_rs(p):
-            logits = p["logits"]
-            msg, ok, ncorr = self._rs_correct(self._bits(logits))
-            return self._finish(msg, ok, ncorr, logits, logits.shape[0])
-
-        return [
-            lanes_lib.Stage("ingest", st_ingest, lanes=ln["ingest"],
-                            depth=depth),
-            lanes_lib.Stage("decode", st_decode, lanes=ln["decode"],
-                            depth=depth, gpu_intensive=True),
-            lanes_lib.Stage("rs", st_rs, lanes=ln["rs"], depth=depth),
-        ]
+        return self.stages.build_stages(
+            ln, finish=self._finish_payload,
+            depth=2 if self.cfg.interleave else 1)
 
     # ------------------------------------------------------------------
     def run_stream(self, batches: Iterable, *, scheduled: bool = True,
-                   lanes: Union[None, int, Dict[str, int]] = None) -> dict:
+                   lanes: Union[None, int, Dict[str, int]] = None,
+                   on_result: Optional[Callable[[int, dict], None]] = None
+                   ) -> dict:
         """Detect a stream of batches; returns throughput metrics.
 
         ``lanes``: None -> lane executor with :meth:`default_lanes` for
         qrmark (plain prefetch loop otherwise); int n -> n decode + n RS
-        lanes; dict -> explicit per-stage lane counts."""
+        lanes; dict -> explicit per-stage lane counts.
+
+        ``on_result(i, res)`` fires as result ``i`` is consumed from the
+        executor — the hook latency monitors need (a completion recorded
+        after the whole stream finished measures nothing)."""
         cfg = self.cfg
         use_exec = lanes is not None or cfg.mode == "qrmark"
         if isinstance(lanes, int):
@@ -403,10 +245,14 @@ class DetectionPipeline:
 
             def feed():
                 for i, raw in enumerate(batches):
-                    yield {"raw": raw, "key": self._batch_key(seq0 + i),
-                           "seq": seq0 + i}
+                    bkey = self._batch_key(seq0 + i)
+                    yield {"raw": raw, "seq": seq0 + i,
+                           "keys": self.stages.image_keys(
+                               bkey, raw.shape[0])}
 
             for r in ex.run(feed()):
+                if on_result is not None:
+                    on_result(len(results), r)
                 results.append(r)
                 n_img += r["logits"].shape[0]
             self._seq = seq0 + len(results)
@@ -416,7 +262,10 @@ class DetectionPipeline:
                 batches, prepare=None,
                 enabled=(cfg.interleave and cfg.mode == "qrmark"))
             for raw in it:
-                results.append(self.detect_batch(raw))
+                r = self.detect_batch(raw)
+                if on_result is not None:
+                    on_result(len(results), r)
+                results.append(r)
                 n_img += raw.shape[0]
             lane_map = {n: 1 for n in STAGE_NAMES}
         wall = time.perf_counter() - t0
@@ -452,7 +301,13 @@ class DetectionPipeline:
             raw_np = np.concatenate(
                 [raw_np, np.repeat(raw_np[-1:], pad, axis=0)])
         x_in = planner.shard_detection_batch(mesh, raw_np)
-        x, keys = self._ingest(x_in, key)
+        # per-image keys shard with the batch (fold_in is per-image, so
+        # the sharded graph stays collective-free)
+        keys = jax.device_put(
+            self.stages.image_keys(key, raw_np.shape[0]),
+            jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec("data")))
+        x = self.stages.ingest_keyed(x_in, keys)
         logits = self._decode_x(x, keys)
         bits = self._bits(logits)
         if self.cfg.rs_mode == "device":
@@ -463,8 +318,7 @@ class DetectionPipeline:
         return self._finish(msg, ok, ncorr, np.asarray(logits)[:b], b)
 
     def close(self):
-        if self._rs_pool is not None:
-            self._rs_pool.close()
+        self.stages.close()
 
 
 def verify_against_key(message_bits: np.ndarray, key_bits: np.ndarray,
@@ -477,7 +331,7 @@ def verify_against_key(message_bits: np.ndarray, key_bits: np.ndarray,
     return agree >= tau
 
 
-def binomial_threshold(n: int, fpr: float) -> int:
+def _binomial_threshold_uncached(n: int, fpr: float) -> int:
     """Smallest tau with  P[Binomial(n, 1/2) >= tau] <= fpr  (exact
     tail via the binomial coefficients).  When even full agreement
     cannot reach the target (2^-n > fpr), returns n + 1 so
@@ -488,3 +342,13 @@ def binomial_threshold(n: int, fpr: float) -> int:
     cum = np.cumsum(probs[::-1])[::-1]
     sat = np.nonzero(cum <= fpr)[0]
     return int(sat[0]) if sat.size else n + 1
+
+
+@functools.lru_cache(maxsize=None)
+def binomial_threshold(n: int, fpr: float) -> int:
+    """Cached :func:`_binomial_threshold_uncached`: tau depends only on
+    (n, fpr), but the exact tail rebuilds the full ``comb`` table —
+    O(n) bignum work — on every call, which :func:`verify_against_key`
+    sits on for every served verification batch.  The cache makes
+    repeated thresholds a dict hit."""
+    return _binomial_threshold_uncached(n, fpr)

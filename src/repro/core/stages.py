@@ -1,0 +1,280 @@
+"""Unified stage registry — the single definition of the detection
+stage functions (QRMark §5.1/§6.2).
+
+Every execution engine derives its compute from one
+:class:`StageRegistry` built once per (config, params):
+
+* ``DetectionPipeline.detect_batch`` — the keyed staged fns, or the
+  fully fused single-jit fast path (``fused_keyed``);
+* ``DetectionPipeline.build_stages`` / ``run_stream`` — the payload
+  stage graph (:meth:`StageRegistry.build_stages`) for the lane
+  executor;
+* ``DetectionPipeline.run_batch`` — the same keyed staged fns over a
+  sharded batch;
+* ``serving.DetectionServer`` — the same payload stage graph, driven by
+  a long-lived service-mode executor.
+
+Before this module the ingest/decode/RS bodies were restated in four
+places inside ``core/detect.py``; now they exist exactly once.
+
+RNG-key discipline (the bit-identity contract): offline, batch k uses
+``fold_in(key(seed), k)`` and image i of that batch uses
+``fold_in(batch_key, i)``.  Key *derivation* is its own jitted function
+(:meth:`image_keys`) and every stage function takes the derived
+per-image key array as an explicit input — ``fold_in`` is integer
+hashing, bit-exact wherever it runs, so a caller that supplies keys
+from somewhere else (the online server derives them per *request*, not
+per coalesced batch) gets results bit-identical to the offline engines
+on the same images with the same keys, no matter how requests were
+batched together.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import extractor as extractor_lib
+from repro.core import lanes as lanes_lib, tiling, transforms
+from repro.core.extractor import extractor_forward
+from repro.core.rs.codec import RSCode, rs_decode
+from repro.core.rs import jax_rs
+from repro.core.rs.cpu_pool import RSCorrectionPool
+
+STAGE_NAMES = ("ingest", "decode", "rs")
+
+# the code the Pallas Berlekamp-Welch kernel is specialised for
+_PALLAS_RS_CODE = (4, 15, 12)  # (m, n, k)
+
+
+def make_device_rs(code: RSCode) -> Callable:
+    """The on-device batched RS engine: the Pallas Berlekamp-Welch
+    kernel for the code it is specialised for, ``jax_rs`` otherwise.
+    Jit-able and safe to inline into a larger jitted graph — every
+    engine (fused fast path, lane executor, sharded run_batch, online
+    server) must use the same decoder so failure tie-breaking never
+    diverges."""
+    if (code.m, code.n, code.k) == _PALLAS_RS_CODE:
+        from repro.kernels import ops as kops
+
+        def decode(bits):
+            return kops.rs_decode(bits, code=code)
+
+        # jitted so sharded inputs (run_batch) go through the SPMD
+        # partitioner instead of eager multi-device dispatch
+        return jax.jit(decode)
+    return jax_rs.make_batch_decoder(code)
+
+
+class StageRegistry:
+    """The detection stage functions, built once per (cfg, params).
+
+    Holds the jitted keyed stage fns, the packed decode weights, the
+    configured RS engine (including the CPU pool's state), and the
+    fused fast path.  Engine objects (pipeline, server) own a registry
+    and derive everything from it."""
+
+    def __init__(self, cfg, params):
+        if cfg.mode not in ("sequential", "tiled", "qrmark"):
+            raise ValueError(f"unknown pipeline mode {cfg.mode!r}")
+        if cfg.rs_mode not in ("device", "cpu_pool", "cpu_sync"):
+            raise ValueError(f"unknown rs_mode {cfg.rs_mode!r}")
+        if cfg.decode_dtype not in extractor_lib.DECODE_DTYPES:
+            raise ValueError(f"unknown decode_dtype {cfg.decode_dtype!r}")
+        self.cfg = cfg
+        self.params = params
+        self.code = cfg.code
+        self.base_key = jax.random.key(cfg.seed)
+        self.tile_first = (cfg.tile_first and cfg.mode == "qrmark"
+                           and cfg.fused_preprocess)
+        self.fused_decode = cfg.fused_decode and cfg.mode == "qrmark"
+        self._rs_pool: Optional[RSCorrectionPool] = None
+        self._device_rs = None
+        self._pool_seq = 0            # RS-pool job id counter
+        self._pool_lock = threading.Lock()
+        self._build()
+
+    # -- RNG-key discipline --------------------------------------------
+    def batch_key(self, seq: int):
+        """Offline key for batch ``seq``: fold_in(key(cfg.seed), seq)."""
+        return jax.random.fold_in(self.base_key, seq)
+
+    def image_keys(self, key, b: int):
+        """Per-image keys fold_in(key, 0..b-1) — THE derivation every
+        engine shares (jitted per b; fold_in is bit-exact regardless of
+        the enclosing graph, so deriving here vs inline is identical)."""
+        return self._image_keys_jit(key, b)
+
+    # -- build ----------------------------------------------------------
+    def _build(self):
+        cfg = self.cfg
+
+        # decode-stage extractor, one fn for every engine: the fused
+        # Pallas kernel on pre-packed params (qrmark; pack once per
+        # registry build, dtype = the precision policy) or the unfused
+        # extractor_forward graph (bit-identical to the fp32 kernel —
+        # they share extractor_forward_packed)
+        if self.fused_decode:
+            from repro.kernels import ops as kops
+            self.packed_params = extractor_lib.pack_params(
+                self.params, cfg.decode_dtype)
+
+            def extract(tiles):
+                return kops.fused_extractor(tiles, self.packed_params)
+        else:
+            self.packed_params = None
+
+            def extract(tiles):
+                return extractor_forward(self.params, tiles)
+
+        def preprocess(raw):
+            if cfg.fused_preprocess and cfg.mode == "qrmark":
+                from repro.kernels import ops as kops
+                return kops.fused_preprocess(raw, resize=cfg.resize_src,
+                                             crop=cfg.img_size)
+            return transforms.preprocess_reference(
+                raw, resize=cfg.resize_src, crop=cfg.img_size)
+
+        # ingest consumes the per-image fold_in keys as an input — the
+        # derivation itself is image_keys(), shared by every caller.
+        # Tile-first: offsets from the keys (static geometry only),
+        # then one kernel straight to the decode input.
+        def ingest_keyed(raw, keys):
+            if self.tile_first:
+                from repro.kernels import ops as kops
+                offs = tiling.tile_first_offsets(
+                    cfg.strategy, keys, img_size=cfg.img_size,
+                    tile=cfg.tile)
+                return kops.fused_tile_preprocess(
+                    raw, offs, resize=cfg.resize_src, crop=cfg.img_size,
+                    tile=cfg.tile)
+            return preprocess(raw)
+
+        def decode_keyed(x, keys):
+            if self.tile_first or cfg.mode == "sequential":
+                tiles = x  # tiles from ingest / full-image decode
+            else:
+                tiles, _ = tiling.select_tiles_per_image(
+                    cfg.strategy, keys, x, cfg.tile)
+            return extract(tiles)
+
+        self.ingest_keyed = jax.jit(ingest_keyed)
+        self.decode_keyed = jax.jit(decode_keyed)
+        self.bits = jax.jit(lambda logits: (logits > 0).astype(jnp.int32))
+        self._image_keys_jit = jax.jit(
+            lambda key, b: jax.vmap(
+                lambda i: jax.random.fold_in(key, i))(jnp.arange(b)),
+            static_argnums=1)
+
+        if cfg.rs_mode == "device":
+            self._device_rs = make_device_rs(self.code)
+        elif cfg.rs_mode == "cpu_pool":
+            self._rs_pool = RSCorrectionPool(self.code,
+                                             n_threads=cfg.rs_threads)
+
+        # fully fused fast path (qrmark + device RS): one jitted graph.
+        # The raw-batch buffer is donated — ingest is its only reader,
+        # so the runtime can recycle the largest in-flight buffer while
+        # decode/RS still run.  CPU cannot reuse a donated uint8 input
+        # (it would only warn once per compile), so donation is applied
+        # on accelerator backends only.
+        if cfg.mode == "qrmark" and cfg.rs_mode == "device":
+            dev_decoder = self._device_rs  # one decoder for every engine
+
+            def fused_keyed(raw, keys):
+                x = ingest_keyed(raw, keys)
+                logits = decode_keyed(x, keys)
+                bits = (logits > 0).astype(jnp.int32)
+                return dev_decoder(bits), logits
+
+            donate = () if jax.default_backend() == "cpu" else (0,)
+            self.fused_keyed = jax.jit(fused_keyed, donate_argnums=donate)
+        else:
+            self.fused_keyed = None
+
+    # -- RS correction ---------------------------------------------------
+    def _rs_host(self, bits: np.ndarray):
+        """(msg, ok, ncorr) via the configured host RS engine."""
+        cfg = self.cfg
+        b = bits.shape[0]
+        msg = np.zeros((b, self.code.message_bits), np.int32)
+        ok = np.zeros((b,), bool)
+        ncorr = np.zeros((b,), np.int32)
+        if cfg.rs_mode == "cpu_pool":
+            with self._pool_lock:
+                base = self._pool_seq
+                self._pool_seq += b
+            self._rs_pool.submit_batch(bits, base)
+            for i, (mi, oki) in enumerate(
+                    self._rs_pool.drain(range(base, base + b))):
+                msg[i], ok[i] = mi[: self.code.message_bits], oki
+        else:  # cpu_sync
+            for i in range(b):
+                res = rs_decode(self.code, bits[i])
+                msg[i] = res.message_bits
+                ok[i] = res.ok
+                ncorr[i] = res.n_corrected
+        return msg, ok, ncorr
+
+    def rs_correct(self, bits):
+        """(msg, ok, ncorr) via the configured RS engine.  ``bits`` stays
+        a device array end-to-end on the device path (zero-copy handoff);
+        host engines pull it to numpy here, at their host boundary."""
+        if self.cfg.rs_mode == "device":
+            rs_out = self._device_rs(bits if isinstance(bits, jax.Array)
+                                     else jnp.asarray(bits))
+            return (rs_out["message_bits"], rs_out["ok"],
+                    rs_out["n_corrected"])
+        return self._rs_host(np.asarray(bits))
+
+    # -- the stage graph ---------------------------------------------------
+    def build_stages(self, lanes: Dict[str, int],
+                     finish: Optional[Callable[[dict], Any]] = None,
+                     depth: int = 2) -> List[lanes_lib.Stage]:
+        """The detection stage graph — THE payload contract every
+        executor-driven engine (offline run_stream, online server)
+        shares.
+
+        Payloads are dicts carrying ``raw`` + ``keys`` (per-image
+        fold_in keys, pre-derived by the feeder/batcher so stage
+        functions are pure and any lane count or arrival interleaving
+        is bit-identical to serial) -> ``x`` -> ``logits`` ->
+        ``msg``/``ok``/``ncorr``.  Between lanes everything stays a
+        device array (jitted stage fns return futures); ``finish(p)``
+        is the sink — the one place device arrays should become numpy.
+        Extra payload fields (request slots, timestamps) flow through
+        untouched."""
+
+        def st_ingest(p):
+            p["x"] = self.ingest_keyed(jax.device_put(p["raw"]),
+                                       p["keys"])
+            return p
+
+        def st_decode(p):
+            p["logits"] = self.decode_keyed(p["x"], p["keys"])
+            return p
+
+        def st_rs(p):
+            p["msg"], p["ok"], p["ncorr"] = self.rs_correct(
+                self.bits(p["logits"]))
+            return finish(p) if finish is not None else p
+
+        return [
+            lanes_lib.Stage("ingest", st_ingest,
+                            lanes=max(1, lanes.get("ingest", 1)),
+                            depth=depth),
+            lanes_lib.Stage("decode", st_decode,
+                            lanes=max(1, lanes.get("decode", 1)),
+                            depth=depth, gpu_intensive=True),
+            lanes_lib.Stage("rs", st_rs,
+                            lanes=max(1, lanes.get("rs", 1)),
+                            depth=depth),
+        ]
+
+    def close(self):
+        if self._rs_pool is not None:
+            self._rs_pool.close()
+            self._rs_pool = None

@@ -1,14 +1,19 @@
 """Serving launcher: batched watermark-detection service + LM decode
 service, driven by QRMark's adaptive allocator and LPT scheduler.
 
-The detection service is the paper's deployment scenario: a stream of
-image batches -> ingest/tile/decode/RS with lanes allocated by
-Algorithm 1 (``allocator.assign``) and executed as real concurrency by
-the :class:`repro.core.lanes.LaneExecutor`; mini-batches are scheduled
-by Algorithm 2 with straggler mitigation.  Ragged / odd-size request
-batches are padded up to a shape bucket (bounding jit recompilation)
-and sliced back — per-image RNG keys make pad rows inert, so padding
-never changes a real image's result.
+Two serving regimes:
+
+* **offline** (:class:`DetectionService`) — a stream of image batches
+  known up front -> ingest/tile/decode/RS with lanes allocated by
+  Algorithm 1 (``allocator.assign``) and executed as real concurrency
+  by the :class:`repro.core.lanes.LaneExecutor`; mini-batches are
+  scheduled by Algorithm 2 with straggler mitigation.  Ragged batches
+  are padded up to a shape bucket (bounding jit recompilation) and
+  sliced back — per-image RNG keys make pad rows inert.
+* **online** (``--online``, :class:`repro.serving.DetectionServer`) —
+  per-request submissions arriving over time through an open-loop
+  Poisson load generator (:func:`open_loop_load`): dynamic
+  micro-batching, admission control, per-request latency percentiles.
 """
 from __future__ import annotations
 
@@ -16,16 +21,19 @@ import argparse
 import dataclasses
 import json
 import time
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, \
+    Tuple  # noqa: F401
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import allocator, scheduler as sched_lib
 from repro.core.detect import DetectionConfig, DetectionPipeline, \
     STAGE_NAMES
 from repro.data import pipeline as data_lib
+# pad_to_bucket moved to the serving layer (the batcher shapes its
+# micro-batches with it); re-exported here for existing callers
+from repro.serving.batcher import AdmissionError, pad_to_bucket  # noqa: F401
 
 
 @dataclasses.dataclass
@@ -39,26 +47,10 @@ class ServiceReport:
     straggler_retries: int = 0
 
 
-def pad_to_bucket(raw: np.ndarray, bucket: int = 0) -> Tuple[np.ndarray, int]:
-    """Pad a ragged batch up to a shape bucket: the next power of two
-    when ``bucket`` is 0, else the next multiple of ``bucket``.  Returns
-    (padded batch, true size).  Bounded bucket count = bounded number of
-    jit compilations no matter what sizes clients send."""
-    b = raw.shape[0]
-    if bucket > 0:
-        target = -(-b // bucket) * bucket
-    else:
-        target = 1
-        while target < b:
-            target *= 2
-    if target == b:
-        return raw, b
-    return np.concatenate(
-        [raw, np.repeat(raw[-1:], target - b, axis=0)]), b
-
-
 class DetectionService:
-    """Adaptive, scheduled detection service (QRMark online stage)."""
+    """Adaptive, scheduled batch-stream detection service (the offline
+    regime; the request-level online runtime is
+    :class:`repro.serving.DetectionServer`, ``--online``)."""
 
     def __init__(self, det_cfg: DetectionConfig, extractor_params, *,
                  lane_budget: int = 8, mem_cap: float = 2e9,
@@ -159,18 +151,25 @@ class DetectionService:
                 mon.start(tid)
                 yield sl
 
-        t0 = time.perf_counter()
-        out = self.pipe.run_stream(feed(), lanes=self.lanes)
-        wall = time.perf_counter() - t0
-        n_img = 0
-        for tid, ((_, true_b), res) in enumerate(zip(work,
-                                                     out["results"])):
-            # slice pad rows back off every per-image field
+        n_img_box = [0]
+
+        def consume(tid: int, res: dict):
+            # completion is recorded HERE, as each result comes off the
+            # executor — recording it after the whole stream finished
+            # (the old zip loop) made every per-task latency the total
+            # stream wall time, useless for straggler timeouts
+            true_b = work[tid][1]
             for k, v in res.items():
                 if getattr(v, "ndim", 0) >= 1:
-                    res[k] = v[:true_b]
-            n_img += true_b
+                    res[k] = v[:true_b]   # slice pad rows off
+            n_img_box[0] += true_b
             mon.complete(tid)
+
+        t0 = time.perf_counter()
+        out = self.pipe.run_stream(feed(), lanes=self.lanes,
+                                   on_result=consume)
+        wall = time.perf_counter() - t0
+        n_img = n_img_box[0]
         return ServiceReport(
             images=n_img, wall_s=wall,
             throughput_ips=n_img / wall if wall else 0.0,
@@ -201,6 +200,94 @@ class DetectionService:
             images=n_img, wall_s=wall,
             throughput_ips=n_img / wall if wall else 0.0,
             allocation=None, lanes=None, lane_loads=None)
+
+
+def open_loop_load(server, *, qps: float, duration_s: float,
+                   make_images: Callable[[int], np.ndarray],
+                   seed: int = 0) -> dict:
+    """Open-loop Poisson load generator (the online serving regime).
+
+    Request k arrives at exponential inter-arrival gaps of mean
+    ``1/qps`` **regardless of completions** — unlike closed-loop
+    drivers, queueing delay is exposed instead of self-throttled, so
+    latency percentiles vs offered load mean something.  Rejected
+    submissions (admission backpressure) are counted, not retried.
+
+    Returns {handles, offered, rejected, wall_s}; call
+    ``server.stats()`` after draining for the latency/throughput view.
+    """
+    rng = np.random.default_rng(seed)
+    handles = []
+    rejected = 0
+    t0 = time.perf_counter()
+    t_next = t0
+    k = 0
+    while t_next - t0 < duration_s:
+        now = time.perf_counter()
+        if now < t_next:
+            time.sleep(t_next - now)
+        try:
+            handles.append(server.submit(make_images(k)))
+        except AdmissionError:
+            rejected += 1
+        k += 1
+        t_next += rng.exponential(1.0 / qps)
+    return {"handles": handles, "offered": k, "rejected": rejected,
+            "wall_s": time.perf_counter() - t0}
+
+
+def run_online(cfg: DetectionConfig, params, *, qps: float,
+               duration_s: float, raw_size: int, group: int = 1,
+               max_batch: int = 16, max_wait_ms: float = 10.0,
+               max_queue: int = 256, lanes: int = 0,
+               realloc_every: int = 0, seed: int = 0,
+               quiet: bool = False) -> dict:
+    """Build a :class:`~repro.serving.DetectionServer`, warm it up,
+    drive it with Poisson arrivals, drain, and report."""
+    from repro.serving import BatcherConfig, DetectionServer
+    lane_map = (None if lanes == 0 else
+                {"ingest": 1, "decode": max(1, lanes),
+                 "rs": max(1, lanes)})
+    srv = DetectionServer(
+        cfg, params,
+        batcher=BatcherConfig(max_batch=max_batch,
+                              max_wait_ms=max_wait_ms,
+                              max_queue=max_queue),
+        lanes=lane_map, realloc_every=realloc_every)
+    buckets = srv.warmup(data_lib.synth_image(0, raw_size))
+    if not quiet:
+        print(f"online: warmed buckets {buckets}, lanes "
+              f"{srv.lane_counts()}", flush=True)
+    srv.start()
+    srv.metrics.reset()
+
+    def make_images(k: int) -> np.ndarray:
+        return np.stack([data_lib.synth_image(1000 + k * group + i,
+                                              raw_size)
+                         for i in range(group)])
+
+    load = open_loop_load(srv, qps=qps, duration_s=duration_s,
+                          make_images=make_images, seed=seed)
+    srv.drain(timeout=120.0)
+    stats = srv.stats()
+    srv.close()
+    lat = stats.get("request_latency_s", {})
+    report = {
+        "qps_offered": qps, "duration_s": duration_s, "group": group,
+        "offered": load["offered"], "rejected": load["rejected"],
+        "completed": int(stats["counters"].get("requests_completed", 0)),
+        "throughput_rps": round(stats["throughput_rps"], 2),
+        "throughput_ips": round(stats["throughput_ips"], 2),
+        "latency_ms": {k: round(lat.get(k, float("nan")) * 1e3, 2)
+                       for k in ("p50", "p95", "p99", "mean")},
+        "batch_occupancy": round(
+            stats.get("batch_occupancy", {}).get("mean", float("nan")),
+            3),
+        "queue_depth_last": stats["gauges"].get("queue_depth", 0),
+        "lanes": stats["lanes"],
+        "straggler_retries": stats["straggler_retries"],
+    }
+    return report
 
 
 def enable_compilation_cache(path: str, *, min_entry_bytes: int = 0,
@@ -252,6 +339,25 @@ def main():
     ap.add_argument("--compilation-cache", default="",
                     help="directory for jax's persistent compilation "
                          "cache (reused across service restarts)")
+    ap.add_argument("--online", action="store_true",
+                    help="request-level serving: DetectionServer + "
+                         "open-loop Poisson load instead of the "
+                         "offline batch-stream service")
+    ap.add_argument("--qps", type=float, default=8.0,
+                    help="offered load for --online (requests/s)")
+    ap.add_argument("--duration", type=float, default=5.0,
+                    help="load-generation window for --online (s)")
+    ap.add_argument("--group", type=int, default=1,
+                    help="images per request for --online")
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help="micro-batcher coalescing cap (--online)")
+    ap.add_argument("--max-wait-ms", type=float, default=10.0,
+                    help="micro-batcher deadline for partial batches")
+    ap.add_argument("--max-queue", type=int, default=256,
+                    help="admission-control depth bound (images)")
+    ap.add_argument("--realloc-every", type=int, default=0,
+                    help="re-run Algorithm 1 on measured stage "
+                         "latencies every N micro-batches (0 = off)")
     args = ap.parse_args()
 
     if args.compilation_cache:
@@ -269,6 +375,16 @@ def main():
                           tile_first=not args.staged_ingest,
                           fused_decode=not args.unfused_decode,
                           decode_dtype=args.decode_dtype)
+    if args.online:
+        rep = run_online(cfg, params, qps=args.qps,
+                         duration_s=args.duration,
+                         raw_size=args.img + 32, group=args.group,
+                         max_batch=args.max_batch,
+                         max_wait_ms=args.max_wait_ms,
+                         max_queue=args.max_queue, lanes=args.lanes,
+                         realloc_every=args.realloc_every)
+        print(json.dumps(rep, indent=1))
+        return
     svc = DetectionService(cfg, params, lanes=args.lanes)
     sample = np.stack([data_lib.synth_image(i, args.img + 32)
                        for i in range(args.batch)])

@@ -1,0 +1,22 @@
+"""Online request-level serving runtime.
+
+The offline engines (``repro.core.detect``) consume a batch stream that
+exists up front; this package is the regime a provenance-checking
+service actually lives in — requests arriving over time, queueing,
+coalescing, and tail latency:
+
+* :mod:`repro.serving.batcher` — dynamic micro-batching with
+  depth-bounded admission control;
+* :mod:`repro.serving.server` — :class:`DetectionServer`: per-request
+  futures over a persistent service-mode lane executor, straggler
+  re-execution, live lane reallocation;
+* :mod:`repro.serving.metrics` — queue depth / batch occupancy /
+  latency percentiles / throughput registry.
+"""
+from repro.serving.batcher import (AdmissionError, BatcherConfig,
+                                   MicroBatcher)
+from repro.serving.metrics import MetricsRegistry
+from repro.serving.server import DetectionServer
+
+__all__ = ["AdmissionError", "BatcherConfig", "MicroBatcher",
+           "MetricsRegistry", "DetectionServer"]

@@ -1,0 +1,208 @@
+"""Dynamic micro-batching for the online detection server.
+
+Requests (single images or small groups, each with pre-derived
+per-image fold_in keys) arrive over time; the batcher coalesces queued
+requests into ``pad_to_bucket``-shaped micro-batches under a
+``max_wait_ms`` deadline:
+
+* a micro-batch ships as soon as ``max_batch`` images are queued, or
+  when the *oldest* queued request has waited ``max_wait_ms`` —
+  deadline-triggered partial batches keep tail latency bounded at low
+  offered load, batch shaping keeps throughput at high load;
+* request groups are atomic (one request's images never split across
+  micro-batches), so each request's result rows are one contiguous
+  slice;
+* admission control is depth-bounded: when ``max_queue`` images are
+  already waiting, ``submit`` raises :class:`AdmissionError`
+  (backpressure to the client, not host OOM) unless ``block=True``.
+
+Bit-identity: the batcher only moves arrays around — keys travel with
+their images, padding rows repeat the last image/key and are sliced
+off after RS — so any coalescing of any arrival order produces results
+bitwise equal to ``detect_batch`` of each request alone with its key.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class AdmissionError(RuntimeError):
+    """Request rejected at admission (invalid, or queue depth bound)."""
+
+
+def pad_to_bucket(raw: np.ndarray, bucket: int = 0) -> Tuple[np.ndarray, int]:
+    """Pad a ragged batch up to a shape bucket: the next power of two
+    when ``bucket`` is 0, else the next multiple of ``bucket``.  Returns
+    (padded batch, true size).  Bounded bucket count = bounded number of
+    jit compilations no matter what sizes clients send.  Empty batches
+    are rejected — there is no row to repeat and no work to do."""
+    b = raw.shape[0]
+    if b == 0:
+        raise AdmissionError(
+            "pad_to_bucket: empty batch (b == 0) — reject empty "
+            "requests at admission instead of padding nothing")
+    if bucket > 0:
+        target = -(-b // bucket) * bucket
+    else:
+        target = 1
+        while target < b:
+            target *= 2
+    if target == b:
+        return raw, b
+    return np.concatenate(
+        [raw, np.repeat(raw[-1:], target - b, axis=0)]), b
+
+
+@dataclasses.dataclass
+class BatcherConfig:
+    max_batch: int = 32       # images per coalesced micro-batch
+    max_wait_ms: float = 5.0  # oldest-request deadline for partial ships
+    max_queue: int = 256      # queued-image admission bound
+    bucket: int = 0           # pad_to_bucket granularity (0 = pow2)
+
+
+@dataclasses.dataclass
+class _Entry:
+    images: np.ndarray        # (n, H, W, 3) uint8
+    keys: Any                 # (n,) typed PRNG keys (jax array)
+    slot: Any                 # opaque per-request handle for the scatter
+    t_enq: float
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    """One coalesced, padded unit of work for the stage graph."""
+    raw: np.ndarray           # (padded_b, H, W, 3)
+    keys: Any                 # (padded_b,) typed PRNG keys
+    slots: List[Tuple[Any, int, int]]   # (slot, offset, n) per request
+    true_b: int
+    padded_b: int
+    t_formed: float
+
+    @property
+    def occupancy(self) -> float:
+        return self.true_b / self.padded_b if self.padded_b else 0.0
+
+
+class MicroBatcher:
+    """Thread-safe request queue + deadline-driven coalescer."""
+
+    def __init__(self, cfg: BatcherConfig = BatcherConfig()):
+        if cfg.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.cfg = cfg
+        self._cv = threading.Condition()
+        self._q: List[_Entry] = []
+        self._depth = 0           # queued images
+        self._closed = False
+
+    # -- admission --------------------------------------------------------
+    def submit(self, images: np.ndarray, keys, slot,
+               *, block: bool = False, timeout: Optional[float] = None):
+        """Admit one request.  Raises :class:`AdmissionError` on an
+        empty/oversized request or (``block=False``) a full queue."""
+        n = int(images.shape[0])
+        if n == 0:
+            raise AdmissionError("empty request (0 images)")
+        if n > self.cfg.max_batch:
+            raise AdmissionError(
+                f"request of {n} images exceeds max_batch="
+                f"{self.cfg.max_batch}; split it client-side")
+        with self._cv:
+            if self._closed:
+                raise AdmissionError("batcher closed")
+            if self._depth + n > self.cfg.max_queue:
+                if not block:
+                    raise AdmissionError(
+                        f"queue full ({self._depth}/{self.cfg.max_queue} "
+                        f"images queued) — backpressure, retry later")
+                ok = self._cv.wait_for(
+                    lambda: self._closed
+                    or self._depth + n <= self.cfg.max_queue, timeout)
+                if not ok or self._closed:
+                    raise AdmissionError("queue full (timed out blocking)"
+                                         if not self._closed else
+                                         "batcher closed")
+            self._q.append(_Entry(images, keys, slot, time.perf_counter()))
+            self._depth += n
+            self._cv.notify_all()
+
+    def depth(self) -> int:
+        """Queued images (admission-control view of the backlog)."""
+        with self._cv:
+            return self._depth
+
+    def close(self):
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+    def flush(self) -> List[_Entry]:
+        """Drain and return whatever is still queued — the shutdown
+        path, so a forced close can reject the orphaned requests
+        instead of leaving their futures unresolved."""
+        with self._cv:
+            take, self._q = self._q, []
+            self._depth = 0
+            self._cv.notify_all()
+            return take
+
+    # -- coalescing ---------------------------------------------------------
+    def next_batch(self, timeout: Optional[float] = None
+                   ) -> Optional[MicroBatch]:
+        """Block until a micro-batch is ready (or ``timeout``); returns
+        None on timeout or when closed and empty.
+
+        Ships when ``max_batch`` images are queued or the oldest
+        request's ``max_wait_ms`` deadline expires — whichever first."""
+        cfg = self.cfg
+        with self._cv:
+            if not self._cv.wait_for(lambda: self._q or self._closed,
+                                     timeout):
+                return None
+            if not self._q:
+                return None          # closed and empty
+            deadline = self._q[0].t_enq + cfg.max_wait_ms / 1e3
+            while (not self._closed and self._depth < cfg.max_batch):
+                rem = deadline - time.perf_counter()
+                if rem <= 0:
+                    break
+                self._cv.wait(rem)
+                if not self._q:      # drained by close() race
+                    return None
+            # pop whole requests up to max_batch (groups stay atomic)
+            take: List[_Entry] = []
+            total = 0
+            while self._q and total + self._q[0].images.shape[0] \
+                    <= cfg.max_batch:
+                e = self._q.pop(0)
+                take.append(e)
+                total += e.images.shape[0]
+            self._depth -= total
+            self._cv.notify_all()    # wake blocked submitters
+        assert take, "next_batch woke with an un-poppable queue head"
+        raw = (take[0].images if len(take) == 1
+               else np.concatenate([e.images for e in take]))
+        keys = (take[0].keys if len(take) == 1
+                else jnp.concatenate([e.keys for e in take]))
+        raw, true_b = pad_to_bucket(raw, cfg.bucket)
+        pad = raw.shape[0] - true_b
+        if pad:
+            # pad keys like the images: repeated rows are inert (results
+            # sliced off before the scatter), any key value works
+            keys = jnp.concatenate([keys, jnp.repeat(keys[-1:], pad,
+                                                     axis=0)])
+        slots, off = [], 0
+        for e in take:
+            n = e.images.shape[0]
+            slots.append((e.slot, off, n))
+            off += n
+        return MicroBatch(raw=raw, keys=keys, slots=slots, true_b=true_b,
+                          padded_b=raw.shape[0],
+                          t_formed=time.perf_counter())

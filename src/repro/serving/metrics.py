@@ -1,0 +1,99 @@
+"""Serving metrics registry: counters, gauges, and windowed latency
+percentiles.
+
+Deliberately dependency-free (no prometheus client in the container):
+a :class:`MetricsRegistry` is a thread-safe dict of counters/gauges
+plus bounded reservoirs for distributions.  ``snapshot()`` renders the
+report the server and the fig11 benchmark consume — queue depth, batch
+occupancy, p50/p95/p99 request latency, throughput.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Deque, Dict, Optional
+
+# distributions keep the most recent N observations — enough for stable
+# tail percentiles at benchmark scale without unbounded growth
+_RESERVOIR = 8192
+
+
+def percentile(sorted_vals, q: float) -> float:
+    """Nearest-rank percentile of an already-sorted list (q in [0,100])."""
+    if not sorted_vals:
+        return float("nan")
+    idx = max(0, min(len(sorted_vals) - 1,
+                     int(round(q / 100.0 * (len(sorted_vals) - 1)))))
+    return float(sorted_vals[idx])
+
+
+class MetricsRegistry:
+    """Thread-safe counters / gauges / distributions for the server."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: Dict[str, float] = {}
+        self._gauges: Dict[str, float] = {}
+        self._dists: Dict[str, Deque[float]] = {}
+        self._t0 = time.perf_counter()
+
+    # -- primitives -----------------------------------------------------
+    def count(self, name: str, delta: float = 1.0):
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0.0) + delta
+
+    def gauge(self, name: str, value: float):
+        with self._lock:
+            self._gauges[name] = float(value)
+
+    def observe(self, name: str, value: float):
+        with self._lock:
+            d = self._dists.get(name)
+            if d is None:
+                d = self._dists[name] = deque(maxlen=_RESERVOIR)
+            d.append(float(value))
+
+    def counter(self, name: str) -> float:
+        with self._lock:
+            return self._counters.get(name, 0.0)
+
+    # -- the serving report ----------------------------------------------
+    def snapshot(self) -> dict:
+        """One dict with everything: counters, gauges, and per
+        distribution n/mean/p50/p95/p99 (latencies in the unit they
+        were observed in — the server observes seconds)."""
+        with self._lock:
+            wall = time.perf_counter() - self._t0
+            out = {"wall_s": wall,
+                   "counters": dict(self._counters),
+                   "gauges": dict(self._gauges)}
+            dists = {k: sorted(v) for k, v in self._dists.items()}
+        for name, vals in dists.items():
+            out[name] = {
+                "n": len(vals),
+                "mean": (sum(vals) / len(vals)) if vals else float("nan"),
+                "p50": percentile(vals, 50),
+                "p95": percentile(vals, 95),
+                "p99": percentile(vals, 99),
+            }
+        done = out["counters"].get("requests_completed", 0.0)
+        imgs = out["counters"].get("images_completed", 0.0)
+        out["throughput_rps"] = done / wall if wall > 0 else 0.0
+        out["throughput_ips"] = imgs / wall if wall > 0 else 0.0
+        return out
+
+    def reset_clock(self):
+        """Restart the throughput window (after warmup, before load)."""
+        with self._lock:
+            self._t0 = time.perf_counter()
+
+    def reset(self):
+        """Drop everything (counters, gauges, distributions) and restart
+        the clock — between sweep points that reuse one server so each
+        offered-load measurement stands alone."""
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._dists.clear()
+            self._t0 = time.perf_counter()

@@ -1,0 +1,442 @@
+"""Online request-level detection server.
+
+``DetectionServer`` is the deployment regime the paper's system layer
+targets (provenance checks under heavy user traffic): requests arrive
+over time, are coalesced by the dynamic micro-batcher, flow through a
+**persistent service-mode lane executor** running the same stage
+registry as every offline engine, and scatter back to per-request
+futures the moment their micro-batch completes.
+
+Request lifecycle::
+
+    submit(images, key) ──► admission (depth bound; empty/oversized
+        rejected) ──► MicroBatcher queue ──► deadline/size-triggered
+        micro-batch ──► service-mode LaneExecutor
+        (ingest ► decode ► rs, N lanes each) ──► result scatter ──►
+        RequestHandle.result()
+
+Correctness anchor: results are **bit-identical** to
+``DetectionPipeline.detect_batch`` of the same images with the same
+keys, for any arrival order, coalescing, bucket size, or lane config —
+each request carries its own fold_in key, per-image keys are derived
+per *request* (not per coalesced batch) by the shared
+``StageRegistry.image_keys``, and padding rows are sliced off before
+the scatter.
+
+Beyond the paper: straggler speculative re-execution (the watchdog
+re-submits micro-batches that exceed the ``StragglerMonitor`` timeout;
+first completion wins) and live lane reallocation (Algorithm 1 re-run
+on *measured* stage latencies, applied with ``LaneExecutor.reconfigure``
+without dropping queued work).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.core import allocator, lanes as lanes_lib
+from repro.core import scheduler as sched_lib
+from repro.core.detect import DetectionConfig, DetectionPipeline
+from repro.serving.batcher import (AdmissionError, BatcherConfig,
+                                   MicroBatcher, pad_to_bucket)
+from repro.serving.metrics import MetricsRegistry
+
+_RESULT_FIELDS = ("message_bits", "ok", "n_corrected", "logits")
+
+
+class RequestHandle:
+    """Future for one submitted request (n images)."""
+
+    def __init__(self, rid: int, n: int):
+        self.rid = rid
+        self.n = n
+        self.t_submit = time.perf_counter()
+        self._ready = threading.Event()
+        self._result: Optional[Dict[str, np.ndarray]] = None
+        self._error: Optional[BaseException] = None
+        self.t_done: Optional[float] = None
+
+    def done(self) -> bool:
+        return self._ready.is_set()
+
+    def result(self, timeout: Optional[float] = None
+               ) -> Dict[str, np.ndarray]:
+        if not self._ready.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not done after "
+                               f"{timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def _resolve(self, result: Dict[str, np.ndarray]):
+        self.t_done = time.perf_counter()
+        self._result = result
+        self._ready.set()
+
+    def _reject(self, err: BaseException):
+        self.t_done = time.perf_counter()
+        self._error = err
+        self._ready.set()
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return (self.t_done - self.t_submit
+                if self.t_done is not None else None)
+
+
+@dataclasses.dataclass
+class _InFlight:
+    mb: Any                     # MicroBatch
+    tid: int
+    done: bool = False          # first completion wins (speculative)
+
+
+class DetectionServer:
+    """Request-level serving runtime over the shared stage registry."""
+
+    def __init__(self, cfg: DetectionConfig, extractor_params, *,
+                 batcher: Optional[BatcherConfig] = None,
+                 lanes: Optional[Dict[str, int]] = None,
+                 straggler_policy: Optional[
+                     sched_lib.StragglerPolicy] = None,
+                 watchdog_interval_s: float = 0.05,
+                 realloc_every: int = 0,
+                 name: str = "detect-server"):
+        self.pipe = DetectionPipeline(cfg, extractor_params)
+        self.registry = self.pipe.stages
+        self.cfg = cfg
+        self.name = name
+        self.metrics = MetricsRegistry()
+        self.batcher = MicroBatcher(batcher or BatcherConfig())
+        self.mon = sched_lib.StragglerMonitor(
+            straggler_policy or sched_lib.StragglerPolicy())
+        self._lanes = dict(lanes or self.pipe.default_lanes())
+        self._watchdog_interval = watchdog_interval_s
+        self._realloc_every = realloc_every
+        self._ex: Optional[lanes_lib.LaneExecutor] = None
+        self._stop = threading.Event()
+        self._threads: list = []
+        self._lock = threading.Lock()
+        self._mon_lock = threading.Lock()   # StragglerMonitor is not
+        self._inflight: Dict[int, _InFlight] = {}   # thread-safe itself
+        self._req_seq = 0
+        self._tid_seq = 0
+        self._batches_done = 0
+        self._last_realloc = 0
+        # admitted vs finished request counts close the drain() race: a
+        # micro-batch in the pump's hands (popped from the batcher, not
+        # yet in _inflight) is invisible to both queues, but its
+        # requests are admitted-and-unfinished
+        self._admitted = 0
+        self._finished = 0
+        # EWMA of measured per-stage seconds/batch for live reallocation
+        self._stage_s: Dict[str, float] = {}
+        self._stage_b: float = 0.0
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "DetectionServer":
+        stages = self.registry.build_stages(
+            self._lanes, finish=self._finish_payload,
+            depth=2 if self.cfg.interleave else 1)
+        for st in stages:
+            st.fn = self._timed(st.name, st.fn)
+        self._ex = lanes_lib.LaneExecutor(stages, name=self.name).start()
+        pump = threading.Thread(target=self._pump_loop, daemon=True,
+                                name=f"{self.name}/pump")
+        dog = threading.Thread(target=self._watchdog_loop, daemon=True,
+                               name=f"{self.name}/watchdog")
+        pump.start()
+        dog.start()
+        self._threads += [pump, dog]
+        return self
+
+    def warmup(self, sample_image: np.ndarray):
+        """Pre-compile the staged stage fns for every pad-bucket shape
+        the batcher can emit (up to ``max_batch``) — otherwise each
+        bucket's first micro-batch pays cold-start jit inside a served
+        request's latency.  Runs the registry fns directly, off the
+        metrics path."""
+        import jax
+        cfg = self.batcher.cfg
+        reg = self.registry
+        sizes = []
+        if cfg.bucket > 0:
+            b = cfg.bucket
+            while b < cfg.max_batch:
+                sizes.append(b)
+                b += cfg.bucket
+        else:
+            b = 1
+            while b < cfg.max_batch:
+                sizes.append(b)
+                b *= 2
+        sizes.append(pad_to_bucket(
+            np.repeat(sample_image[None], cfg.max_batch, 0),
+            cfg.bucket)[0].shape[0])
+        for b in sorted(set(sizes)):
+            raw = np.repeat(sample_image[None], b, axis=0)
+            keys = reg.image_keys(reg.base_key, b)
+            logits = reg.decode_keyed(reg.ingest_keyed(raw, keys), keys)
+            jax.block_until_ready(reg.rs_correct(reg.bits(logits))[0])
+        return sorted(set(sizes))
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Wait until every admitted request has been resolved (covers
+        the batcher queue, batches in the pump's hands, and the
+        executor — nothing can be admitted-and-unfinished in between)."""
+        t_end = (time.perf_counter() + timeout
+                 if timeout is not None else None)
+        while True:
+            with self._lock:
+                idle = self._finished >= self._admitted
+            if idle:
+                return True
+            if t_end is not None and time.perf_counter() > t_end:
+                return False
+            time.sleep(0.002)
+
+    def close(self):
+        """Graceful shutdown: stop admission, drain in-flight work,
+        stop the loops, close the executor and the pipeline.  Requests
+        that survive the drain timeout are rejected, never left with an
+        unresolved future."""
+        self.batcher.close()
+        self.drain(timeout=30.0)
+        self._stop.set()
+        if self._ex is not None:
+            self._ex.drain(timeout=10.0)
+            self._ex.close()   # rejects leftover tickets THROUGH their
+            #                    callbacks -> _on_done rejects the slots
+        for e in self.batcher.flush():   # never popped by the pump
+            self._finish_requests([e.slot], error=RuntimeError(
+                f"{self.name}: server closed before dispatch"))
+        self.pipe.close()
+        me = threading.current_thread()
+        for t in self._threads:
+            if t is not me:
+                t.join(timeout=2.0)
+
+    def _finish_requests(self, slots, *, error: BaseException):
+        for slot in slots:
+            slot._reject(error)
+        self.metrics.count("requests_failed", len(slots))
+        with self._lock:
+            self._finished += len(slots)
+
+    # -- request path ---------------------------------------------------------
+    def submit(self, images: np.ndarray, *, key=None,
+               block: bool = False) -> RequestHandle:
+        """Admit one request (n images, one fold_in key).
+
+        ``key`` defaults to the offline discipline —
+        ``fold_in(key(cfg.seed), request_seq)`` — so a stream of online
+        requests reproduces ``detect_batch`` called once per request on
+        a fresh pipeline.  Raises :class:`AdmissionError` on
+        backpressure (``block=True`` waits instead)."""
+        images = np.asarray(images)
+        if images.ndim == 3:           # single image -> group of one
+            images = images[None]
+        with self._lock:
+            rid = self._req_seq
+            self._req_seq += 1
+        if key is None:
+            key = self.registry.batch_key(rid)
+        n = images.shape[0]
+        handle = RequestHandle(rid, n)
+        # per-REQUEST image keys: coalescing can't change them, which is
+        # what makes online results bit-identical to offline
+        keys = self.registry.image_keys(key, n) if n else None
+        try:
+            self.batcher.submit(images, keys, handle, block=block)
+        except AdmissionError:
+            self.metrics.count("requests_rejected")
+            raise
+        with self._lock:
+            self._admitted += 1
+        self.metrics.count("requests_admitted")
+        self.metrics.gauge("queue_depth", self.batcher.depth())
+        return handle
+
+    # -- internal: micro-batch dispatch ---------------------------------------
+    def _payload(self, mb) -> dict:
+        # a FRESH dict per dispatch: stage fns annotate the payload in
+        # place, so a speculative retry must not share the original
+        return {"raw": mb.raw, "keys": mb.keys}
+
+    def _dispatch(self, inf: _InFlight, *, retry: bool = False):
+        if retry:
+            self.metrics.count("straggler_retries")
+        else:
+            with self._mon_lock:
+                self.mon.start(inf.tid)
+        self._ex.submit(self._payload(inf.mb),
+                        callback=lambda t, inf=inf: self._on_done(inf, t))
+
+    def _pump_loop(self):
+        while not self._stop.is_set():
+            mb = self.batcher.next_batch(timeout=0.05)
+            if mb is None:
+                continue
+            with self._lock:
+                tid = self._tid_seq
+                self._tid_seq += 1
+                inf = _InFlight(mb=mb, tid=tid)
+                self._inflight[tid] = inf
+            self.metrics.observe("batch_occupancy", mb.occupancy)
+            self.metrics.observe("batch_images", mb.true_b)
+            self.metrics.gauge("queue_depth", self.batcher.depth())
+            try:
+                self._dispatch(inf)
+            except RuntimeError as e:   # executor closed under us: the
+                # batch must still resolve (reject), and the pump must
+                # keep looping to fail any remaining queued batches
+                with self._lock:
+                    inf.done = True
+                    self._inflight.pop(inf.tid, None)
+                self._finish_requests([s for s, _, _ in mb.slots],
+                                      error=e)
+
+    def _finish_payload(self, p: dict) -> dict:
+        """Stage-graph sink: device -> numpy on the rs lane."""
+        return {"message_bits": np.asarray(p["msg"]),
+                "ok": np.asarray(p["ok"]),
+                "n_corrected": np.asarray(p["ncorr"]),
+                "logits": np.asarray(p["logits"])}
+
+    def _on_done(self, inf: _InFlight, ticket):
+        """Executor callback (completion order): scatter to requests."""
+        with self._lock:
+            if inf.done:          # a speculative duplicate lost the race
+                return
+            inf.done = True
+            self._inflight.pop(inf.tid, None)
+            self._batches_done += 1
+        with self._mon_lock:
+            self.mon.complete(inf.tid)
+        err = ticket.exception(0)
+        mb = inf.mb
+        if err is not None:
+            self._finish_requests([s for s, _, _ in mb.slots], error=err)
+            return
+        res = ticket.result(0)
+        for slot, off, n in mb.slots:
+            slot._resolve({f: res[f][off: off + n]
+                           for f in _RESULT_FIELDS})
+            self.metrics.count("requests_completed")
+            self.metrics.count("images_completed", n)
+            self.metrics.observe("request_latency_s", slot.latency_s)
+        with self._lock:
+            self._finished += len(mb.slots)
+        self.metrics.observe("batch_latency_s",
+                             time.perf_counter() - mb.t_formed)
+
+    # -- straggler mitigation ----------------------------------------
+    def _watchdog_loop(self):
+        """Speculative re-execution: re-submit micro-batches the monitor
+        flags as stragglers (stage fns are pure, first completion wins —
+        ``_on_done`` drops the loser by the ``done`` flag).  Periodic
+        live reallocation also runs here: reconfigure() can block on the
+        bounded stage queues, which must never happen on the executor's
+        dispatcher thread (it is what drains them)."""
+        while not self._stop.is_set():
+            time.sleep(self._watchdog_interval)
+            with self._mon_lock:
+                stragglers = self.mon.stragglers()
+            for tid in stragglers:
+                with self._lock:
+                    inf = self._inflight.get(tid)
+                if inf is None or inf.done:
+                    continue
+                with self._mon_lock:
+                    self.mon.mark_retried(tid)
+                try:
+                    self._dispatch(inf, retry=True)
+                except RuntimeError:
+                    return        # executor closed under us
+            if self._realloc_every:
+                with self._lock:
+                    due = (self._batches_done - self._last_realloc
+                           >= self._realloc_every)
+                    if due:
+                        self._last_realloc = self._batches_done
+                if due:
+                    try:
+                        self.reallocate()
+                    except Exception:
+                        pass      # reallocation must never kill serving
+
+    # -- live reallocation -------------------------------------------
+    def _timed(self, name: str, fn):
+        def timed_fn(p):
+            t0 = time.perf_counter()
+            out = fn(p)
+            dt = time.perf_counter() - t0
+            with self._lock:
+                prev = self._stage_s.get(name)
+                self._stage_s[name] = (dt if prev is None
+                                       else 0.8 * prev + 0.2 * dt)
+                if name == "ingest":
+                    b = p["raw"].shape[0]
+                    self._stage_b = (b if not self._stage_b
+                                     else 0.8 * self._stage_b + 0.2 * b)
+            self.metrics.observe(f"stage_{name}_s", dt)
+            return out
+        return timed_fn
+
+    def stage_profiles(self):
+        """Algorithm 1 profiles from the *measured* (EWMA) stage wall
+        times — the online replacement for warmup profiling.  Jitted
+        stage fns dispatch asynchronously, so these are dispatch+host
+        times; they still rank the stages, which is what the allocator
+        consumes.  Returns None until every stage has been observed."""
+        with self._lock:
+            if any(n not in self._stage_s for n in ("ingest", "decode",
+                                                    "rs")):
+                return None
+            b = max(self._stage_b, 1.0)
+            # u is not measurable from wall times; 1 byte/sample keeps
+            # the allocation latency-driven (the warmup path measures
+            # real bytes when a memory cap matters)
+            return [allocator.StageProfile(
+                        name=n, t_per_sample=self._stage_s[n] / b,
+                        u_per_sample=1.0, launch_overhead=0.0)
+                    for n in ("ingest", "decode", "rs")]
+
+    def reallocate(self, lane_budget: Optional[int] = None
+                   ) -> Optional[Dict[str, int]]:
+        """Re-run Algorithm 1 on measured stage latencies and apply the
+        allocation to the RUNNING executor (live reconfiguration); the
+        paper's warmup allocation assumed latencies that drift under
+        real traffic.  No-op until all stages have been measured."""
+        profiles = self.stage_profiles()
+        if profiles is None or self._ex is None:
+            return None
+        budget = lane_budget or self.cfg.lane_budget
+        new = allocator.assign(
+            profiles, global_batch=max(int(self._stage_b), 1),
+            lane_budget=budget)
+        self._lanes = new
+        applied = self._ex.reconfigure(new)
+        self.metrics.count("reallocations")
+        return applied
+
+    # -- reporting ------------------------------------------------------------
+    def lane_counts(self) -> Dict[str, int]:
+        return (self._ex.lane_counts() if self._ex is not None
+                else dict(self._lanes))
+
+    def stats(self) -> dict:
+        out = self.metrics.snapshot()
+        out["lanes"] = self.lane_counts()
+        # the resettable metrics counter, NOT mon.retry_count: one
+        # server is reused across fig11 sweep points with a metrics
+        # reset between them, and the monitor's cumulative total would
+        # misattribute earlier points' retries to later rows
+        out["straggler_retries"] = int(
+            self.metrics.counter("straggler_retries"))
+        out["queue_depth"] = self.batcher.depth()
+        return out

@@ -1,0 +1,43 @@
+"""Deadlock canary for service-mode executor/server tests.
+
+``@deadline(seconds)`` runs the test body in a worker thread and FAILS
+(instead of hanging the whole suite) if it does not finish in time —
+the failure mode of a queue/lock bug in the long-lived executor is a
+silent deadlock, which a plain test would turn into a CI timeout with
+no traceback.  (pytest-timeout is not in the container; this is the
+dependency-free equivalent, registered as the ``deadline`` marker in
+pytest.ini for bookkeeping.)
+
+Not named test_*.py on purpose — pytest must not collect it.
+"""
+from __future__ import annotations
+
+import functools
+import threading
+
+import pytest
+
+
+def deadline(seconds: float):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            err = []
+
+            def run():
+                try:
+                    fn(*args, **kwargs)
+                except BaseException as e:   # re-raised on the test thread
+                    err.append(e)
+
+            t = threading.Thread(target=run, daemon=True,
+                                 name=f"deadline/{fn.__name__}")
+            t.start()
+            t.join(seconds)
+            if t.is_alive():
+                pytest.fail(f"deadlock canary: {fn.__name__} still "
+                            f"running after {seconds}s")
+            if err:
+                raise err[0]
+        return pytest.mark.deadline(wrapper)
+    return deco

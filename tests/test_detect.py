@@ -138,6 +138,21 @@ def test_binomial_threshold_tau(n, fpr):
     assert not verify_against_key(below, key, fpr=fpr).any()
 
 
+@pytest.mark.parametrize("n", [48, 60])
+@pytest.mark.parametrize("fpr", [1e-3, 1e-6])
+def test_binomial_threshold_cache_agrees_with_uncached(n, fpr):
+    """The lru_cache wrapper must be a pure memo: cached and uncached
+    values agree across the (n, fpr) grid, and repeated calls hit the
+    cache instead of rebuilding the comb table."""
+    from repro.core.detect import _binomial_threshold_uncached
+    assert binomial_threshold(n, fpr) == \
+        _binomial_threshold_uncached(n, fpr)
+    before = binomial_threshold.cache_info().hits
+    assert binomial_threshold(n, fpr) == \
+        _binomial_threshold_uncached(n, fpr)
+    assert binomial_threshold.cache_info().hits > before
+
+
 def test_binomial_threshold_fails_closed_for_short_keys():
     """When even full agreement can't reach the target FPR (2^-n > fpr)
     the threshold must reject everything, not accept everything."""

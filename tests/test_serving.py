@@ -1,0 +1,469 @@
+"""Online serving runtime tests: service-mode executor (submit/drain/
+close/reconfigure), dynamic micro-batcher (deadline partial batches,
+atomic groups, admission backpressure), and the DetectionServer's
+correctness anchor — online results bit-identical to detect_batch for
+any request interleaving, coalescing, bucket size, and lane config.
+
+Executor/server tests wear the deadlock canary (tests/canary.py): a
+queue/lock bug in the long-lived executor shows up as a hang, which
+the canary turns into a failure with a message instead of a CI timeout.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from canary import deadline
+from repro.core.detect import DetectionConfig, DetectionPipeline
+from repro.core.extractor import init_extractor
+from repro.core.lanes import LaneExecutor, Stage
+from repro.core.rs.codec import DEFAULT_CODE
+from repro.core.scheduler import StragglerPolicy
+from repro.serving import (AdmissionError, BatcherConfig, DetectionServer,
+                           MicroBatcher)
+from repro.serving.batcher import pad_to_bucket
+from repro.serving.metrics import MetricsRegistry, percentile
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# service-mode executor
+# ---------------------------------------------------------------------------
+
+
+@deadline(30)
+def test_service_submit_out_of_order_completion():
+    """Completions are delivered the moment they exist (callback order
+    follows finish time, not submit order); results stay correct."""
+    def jitter(x):
+        time.sleep(0.02 if x == 0 else 0.001)
+        return x * 10
+
+    done = []
+    ex = LaneExecutor([Stage("s", jitter, lanes=4, depth=4)]).start()
+    tks = [ex.submit(i, callback=lambda t: done.append(t.seq))
+           for i in range(8)]
+    assert [t.result(10) for t in tks] == [i * 10 for i in range(8)]
+    assert ex.drain(10)
+    assert sorted(done) == list(range(8))
+    assert done[-1] == 0, "slowest item should complete last (0 slept)"
+    ex.close()
+
+
+@deadline(30)
+def test_service_submit_drain_ordering_regression():
+    """submit -> drain -> submit again: the executor is long-lived."""
+    ex = LaneExecutor([Stage("a", lambda x: x + 1, lanes=2),
+                       Stage("b", lambda x: x * 2, lanes=2)]).start()
+    r1 = [ex.submit(i) for i in range(10)]
+    assert ex.drain(10)
+    r2 = [ex.submit(i) for i in range(10, 20)]
+    assert [t.result(10) for t in r1 + r2] == \
+        [(i + 1) * 2 for i in range(20)]
+    assert ex.pending() == 0
+    ex.close()
+
+
+@deadline(30)
+def test_service_stage_error_rejects_only_that_ticket():
+    def boom(x):
+        if x == 2:
+            raise ValueError("boom")
+        return x
+
+    ex = LaneExecutor([Stage("s", boom, lanes=2)]).start()
+    tks = [ex.submit(i) for i in range(5)]
+    for i, t in enumerate(tks):
+        if i == 2:
+            with pytest.raises(ValueError, match="boom"):
+                t.result(10)
+        else:
+            assert t.result(10) == i
+    ex.close()
+
+
+@deadline(30)
+def test_service_close_rejects_unresolved_tickets():
+    gate = threading.Event()
+    ex = LaneExecutor([Stage("s", lambda x: (gate.wait(5), x)[1],
+                             depth=4)]).start()
+    t = ex.submit(1)
+    ex.close()          # without drain: ticket must reject, not hang
+    gate.set()
+    with pytest.raises(RuntimeError, match="closed"):
+        t.result(10)
+    with pytest.raises(RuntimeError, match="closed"):
+        ex.submit(2)
+
+
+@deadline(60)
+def test_service_reconfigure_grows_and_shrinks_live():
+    """Lane counts change under load without dropping or corrupting
+    queued work (Algorithm 1 re-applied online)."""
+    ex = LaneExecutor([Stage("s", lambda x: (time.sleep(0.002), x + 1)[1],
+                             lanes=1, depth=8)]).start()
+    tks = [ex.submit(i) for i in range(20)]
+    assert ex.reconfigure({"s": 4}) == {"s": 4}
+    tks += [ex.submit(i) for i in range(20, 40)]
+    assert ex.reconfigure({"s": 2}) == {"s": 2}
+    tks += [ex.submit(i) for i in range(40, 60)]
+    assert [t.result(30) for t in tks] == [i + 1 for i in range(60)]
+    assert ex.lane_counts() == {"s": 2}
+    assert ex.drain(10)
+    ex.close()
+
+
+@deadline(30)
+def test_run_and_start_are_mutually_exclusive():
+    ex = LaneExecutor([Stage("s", lambda x: x)])
+    assert ex.map(range(3)) == [0, 1, 2]
+    with pytest.raises(RuntimeError):
+        ex.start()
+    ex2 = LaneExecutor([Stage("s", lambda x: x)]).start()
+    with pytest.raises(RuntimeError):
+        list(ex2.run(range(3)))
+    ex2.close()
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher
+# ---------------------------------------------------------------------------
+
+
+def _imgs(n, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, 256, (n, 8, 8, 3), dtype=np.uint8)
+
+
+def _keys(n):
+    return jax.vmap(lambda i: jax.random.fold_in(jax.random.key(0), i))(
+        np.arange(n))
+
+
+def test_pad_to_bucket_rejects_empty_batch():
+    with pytest.raises(AdmissionError, match="empty"):
+        pad_to_bucket(np.zeros((0, 8, 8, 3), np.uint8))
+    # the launch-layer re-export is the same guarded function
+    from repro.launch.serve import pad_to_bucket as serve_pad
+    assert serve_pad is pad_to_bucket
+    padded, b = pad_to_bucket(_imgs(3))
+    assert padded.shape[0] == 4 and b == 3
+
+
+def test_batcher_rejects_empty_and_oversized_requests():
+    mb = MicroBatcher(BatcherConfig(max_batch=4))
+    with pytest.raises(AdmissionError, match="empty"):
+        mb.submit(_imgs(0), None, slot=None)
+    with pytest.raises(AdmissionError, match="max_batch"):
+        mb.submit(_imgs(5), _keys(5), slot=None)
+
+
+@deadline(30)
+def test_batcher_deadline_triggers_partial_batch():
+    mb = MicroBatcher(BatcherConfig(max_batch=16, max_wait_ms=40.0))
+    mb.submit(_imgs(3), _keys(3), slot="r0")
+    t0 = time.perf_counter()
+    out = mb.next_batch(timeout=5.0)
+    waited = time.perf_counter() - t0
+    assert out is not None
+    assert out.true_b == 3 and out.padded_b == 4     # pow2 bucket
+    assert out.slots == [("r0", 0, 3)]
+    assert waited >= 0.02, "partial batch shipped before the deadline"
+
+
+@deadline(30)
+def test_batcher_coalesces_up_to_max_batch():
+    mb = MicroBatcher(BatcherConfig(max_batch=4, max_wait_ms=500.0))
+    for i in range(6):
+        mb.submit(_imgs(1, seed=i), _keys(1), slot=i)
+    t0 = time.perf_counter()
+    out = mb.next_batch(timeout=5.0)
+    assert time.perf_counter() - t0 < 0.4, \
+        "full batch must ship immediately, not wait for the deadline"
+    assert out.true_b == 4 and [s[0] for s in out.slots] == [0, 1, 2, 3]
+    out2 = mb.next_batch(timeout=5.0)   # deadline flush of the rest
+    assert out2.true_b == 2 and [s[0] for s in out2.slots] == [4, 5]
+
+
+@deadline(30)
+def test_batcher_request_groups_stay_atomic():
+    mb = MicroBatcher(BatcherConfig(max_batch=4, max_wait_ms=1.0))
+    mb.submit(_imgs(3), _keys(3), slot="a")
+    mb.submit(_imgs(2), _keys(2), slot="b")
+    out = mb.next_batch(timeout=5.0)
+    assert [s[0] for s in out.slots] == ["a"], \
+        "a 2-image group must not split to top up a 3-image batch"
+    out2 = mb.next_batch(timeout=5.0)
+    assert [s[0] for s in out2.slots] == ["b"]
+
+
+@deadline(30)
+def test_batcher_admission_backpressure_under_slow_consumer():
+    """Nobody drains the queue: admission must reject at the depth
+    bound (backpressure, not OOM) and resume once space frees."""
+    mb = MicroBatcher(BatcherConfig(max_batch=4, max_queue=4,
+                                    max_wait_ms=1.0))
+    for i in range(4):
+        mb.submit(_imgs(1, seed=i), _keys(1), slot=i)
+    with pytest.raises(AdmissionError, match="queue full"):
+        mb.submit(_imgs(1), _keys(1), slot=99)
+    assert mb.depth() == 4
+    # block=True parks the submitter until the consumer catches up
+    done = []
+
+    def blocked_submit():
+        mb.submit(_imgs(1), _keys(1), slot="late", block=True,
+                  timeout=10.0)
+        done.append(True)
+
+    t = threading.Thread(target=blocked_submit, daemon=True)
+    t.start()
+    time.sleep(0.05)
+    assert not done, "blocked submitter admitted past the depth bound"
+    assert mb.next_batch(timeout=5.0) is not None    # consumer drains
+    t.join(10.0)
+    assert done and mb.depth() == 1
+
+
+# ---------------------------------------------------------------------------
+# DetectionServer: online == offline, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return init_extractor(jax.random.key(0),
+                          n_bits=DEFAULT_CODE.codeword_bits,
+                          channels=8, depth=2)
+
+
+def _cfg(**kw):
+    base = dict(tile=16, img_size=32, resize_src=40, mode="qrmark",
+                rs_mode="device")
+    base.update(kw)
+    return DetectionConfig(**base)
+
+
+_FIELDS = ("message_bits", "ok", "n_corrected", "logits")
+
+
+def _online_trial(params, *, seed, max_batch, bucket, lanes,
+                  max_wait_ms, n_requests=10):
+    """Submit a random request stream (random group sizes + arrival
+    jitter) online; compare each result against detect_batch of the
+    same images with the same key on a fresh offline pipeline."""
+    rng = np.random.default_rng(seed)
+    reqs = [rng.integers(0, 256, (int(rng.integers(1, 5)), 64, 64, 3),
+                         dtype=np.uint8) for _ in range(n_requests)]
+    keys = [jax.random.key(int(rng.integers(0, 2**31)))
+            for _ in range(n_requests)]
+    srv = DetectionServer(
+        _cfg(), params,
+        batcher=BatcherConfig(max_batch=max_batch, max_wait_ms=max_wait_ms,
+                              bucket=bucket),
+        lanes=lanes).start()
+    try:
+        handles = []
+        for r, k in zip(reqs, keys):
+            handles.append(srv.submit(r, key=k))
+            if rng.random() < 0.5:      # random arrival interleaving
+                time.sleep(float(rng.uniform(0, 0.01)))
+        results = [h.result(300) for h in handles]
+    finally:
+        srv.close()
+    pipe = DetectionPipeline(_cfg(), params)
+    for i, (r, k, res) in enumerate(zip(reqs, keys, results)):
+        ref = pipe.detect_batch(r, key=k)
+        for f in _FIELDS:
+            np.testing.assert_array_equal(
+                ref[f], res[f],
+                err_msg=f"trial seed={seed} request {i} field {f}: "
+                        f"online != detect_batch")
+
+
+@deadline(420)
+def test_online_bit_identity_random_interleavings(tiny_params):
+    """The acceptance anchor: for random arrival orders, group sizes,
+    bucket sizes, and lane configs, DetectionServer results are bitwise
+    equal to DetectionPipeline.detect_batch on the qrmark/device path."""
+    trials = [
+        dict(seed=1, max_batch=8, bucket=0, max_wait_ms=3.0,
+             lanes={"ingest": 1, "decode": 3, "rs": 2}),
+        dict(seed=2, max_batch=5, bucket=3, max_wait_ms=1.0,
+             lanes={"ingest": 1, "decode": 1, "rs": 1}),
+    ]
+    for t in trials:
+        _online_trial(tiny_params, **t)
+
+
+@deadline(300)
+def test_online_straggler_retry_keeps_results_exact(tiny_params):
+    """An absurdly aggressive straggler policy forces speculative
+    re-execution of nearly every micro-batch; first-completion-wins
+    plus pure stage fns must keep results bitwise correct."""
+    srv = DetectionServer(
+        _cfg(), tiny_params,
+        batcher=BatcherConfig(max_batch=4, max_wait_ms=1.0),
+        straggler_policy=StragglerPolicy(timeout_factor=0.0,
+                                         min_timeout_s=0.001,
+                                         max_retries=2),
+        watchdog_interval_s=0.005).start()
+    rng = np.random.default_rng(3)
+    reqs = [rng.integers(0, 256, (2, 64, 64, 3), dtype=np.uint8)
+            for _ in range(6)]
+    keys = [jax.random.key(50 + i) for i in range(6)]
+    try:
+        handles = [srv.submit(r, key=k) for r, k in zip(reqs, keys)]
+        results = [h.result(120) for h in handles]
+        retries = srv.mon.retry_count
+    finally:
+        srv.close()
+    assert retries > 0, "the watchdog never re-issued a straggler"
+    pipe = DetectionPipeline(_cfg(), tiny_params)
+    for r, k, res in zip(reqs, keys, results):
+        ref = pipe.detect_batch(r, key=k)
+        for f in _FIELDS:
+            np.testing.assert_array_equal(ref[f], res[f])
+
+
+@deadline(300)
+def test_online_live_reallocation_mid_traffic(tiny_params):
+    """reallocate() applies Algorithm 1 on measured stage latencies to
+    the RUNNING executor; traffic before and after stays correct."""
+    srv = DetectionServer(
+        _cfg(), tiny_params,
+        batcher=BatcherConfig(max_batch=4, max_wait_ms=1.0),
+        lanes={"ingest": 1, "decode": 1, "rs": 1}).start()
+    rng = np.random.default_rng(4)
+    reqs = [rng.integers(0, 256, (2, 64, 64, 3), dtype=np.uint8)
+            for _ in range(8)]
+    keys = [jax.random.key(80 + i) for i in range(8)]
+    try:
+        first = [srv.submit(r, key=k)
+                 for r, k in zip(reqs[:4], keys[:4])]
+        [h.result(120) for h in first]
+        assert srv.drain(60)
+        applied = srv.reallocate(lane_budget=6)
+        assert applied is not None
+        assert sum(applied.values()) <= 6
+        assert srv.lane_counts() == applied
+        second = [srv.submit(r, key=k)
+                  for r, k in zip(reqs[4:], keys[4:])]
+        results = [h.result(120) for h in second]
+    finally:
+        srv.close()
+    pipe = DetectionPipeline(_cfg(), tiny_params)
+    for r, k, res in zip(reqs[4:], keys[4:], results):
+        ref = pipe.detect_batch(r, key=k)
+        for f in _FIELDS:
+            np.testing.assert_array_equal(ref[f], res[f])
+
+
+@deadline(300)
+def test_server_close_never_leaves_unresolved_futures(tiny_params):
+    """Shutdown guarantee: every admitted request's handle resolves —
+    with a result (drained before close) or a rejection — never a
+    future that blocks forever.  Covers the executor-close callback
+    path and the batcher flush of never-dispatched requests."""
+    srv = DetectionServer(
+        _cfg(), tiny_params,
+        batcher=BatcherConfig(max_batch=4, max_wait_ms=200.0)).start()
+    rng = np.random.default_rng(9)
+    handles = [srv.submit(rng.integers(0, 256, (1, 64, 64, 3),
+                                       dtype=np.uint8),
+                          key=jax.random.key(i)) for i in range(5)]
+    srv.close()          # immediately, with requests possibly queued
+    for h in handles:
+        assert h.done() or h._ready.wait(5), \
+            "close() left a request future unresolved"
+        try:
+            res = h.result(0)
+            assert res["message_bits"].shape[0] == 1
+        except RuntimeError:
+            pass         # rejected at shutdown: also a resolution
+
+
+@deadline(120)
+def test_server_rejects_empty_request(tiny_params):
+    srv = DetectionServer(_cfg(), tiny_params).start()
+    try:
+        with pytest.raises(AdmissionError):
+            srv.submit(np.zeros((0, 64, 64, 3), np.uint8))
+        assert srv.metrics.counter("requests_rejected") == 1
+    finally:
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def test_percentiles_and_snapshot():
+    m = MetricsRegistry()
+    for v in range(1, 101):
+        m.observe("lat", v / 1000.0)
+    m.count("requests_completed", 100)
+    m.count("images_completed", 100)
+    snap = m.snapshot()
+    assert snap["lat"]["n"] == 100
+    assert snap["lat"]["p50"] == pytest.approx(0.050, abs=0.002)
+    assert snap["lat"]["p95"] == pytest.approx(0.095, abs=0.002)
+    assert snap["lat"]["p99"] == pytest.approx(0.099, abs=0.002)
+    assert snap["throughput_rps"] > 0
+    m.reset()
+    snap2 = m.snapshot()
+    assert "lat" not in snap2 and not snap2["counters"]
+    assert percentile([], 50) != percentile([], 50)   # NaN on empty
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(sizes=st.lists(st.integers(1, 4), min_size=1, max_size=6),
+           bucket=st.sampled_from([0, 2, 3]))
+    def test_batcher_slicing_covers_every_request(sizes, bucket):
+        """Property: coalesced slots tile [0, true_b) exactly, padding
+        never leaks into a slot, for any group sizes and bucket."""
+        mb = MicroBatcher(BatcherConfig(max_batch=16, max_wait_ms=0.5,
+                                        bucket=bucket))
+        for i, n in enumerate(sizes):
+            mb.submit(_imgs(n, seed=i), _keys(n), slot=i)
+        covered = []
+        while sum(len(c) for c in covered) < len(sizes):
+            out = mb.next_batch(timeout=2.0)
+            assert out is not None
+            off = 0
+            for slot, o, n in out.slots:
+                assert o == off and n == sizes[slot]
+                off += n
+            assert off == out.true_b <= out.padded_b
+            covered.append(out.slots)
+else:                                                  # pragma: no cover
+    def test_batcher_slicing_covers_every_request():
+        rng = np.random.default_rng(11)
+        for trial in range(10):
+            sizes = list(rng.integers(1, 5,
+                                      size=int(rng.integers(1, 7))))
+            bucket = int(rng.choice([0, 2, 3]))
+            mb = MicroBatcher(BatcherConfig(max_batch=16,
+                                            max_wait_ms=0.5,
+                                            bucket=bucket))
+            for i, n in enumerate(sizes):
+                mb.submit(_imgs(int(n), seed=i), _keys(int(n)), slot=i)
+            seen = 0
+            while seen < len(sizes):
+                out = mb.next_batch(timeout=2.0)
+                assert out is not None
+                off = 0
+                for slot, o, n in out.slots:
+                    assert o == off and n == sizes[slot]
+                    off += n
+                assert off == out.true_b <= out.padded_b
+                seen += len(out.slots)
