@@ -28,6 +28,8 @@ MODULES = [
     ("fig10_decode", "Fig 10: unfused vs fused decode, fp32 vs bf16"),
     ("fig11_online_serving",
      "Fig 11: online serving — offered load vs latency percentiles"),
+    ("fig12_escalation",
+     "Fig 12: adaptive multi-tile escalation under attacks"),
     ("alloc_adaptivity", "§3: stream-allocation adaptivity"),
     ("kernel_fusion", "App B.1: preprocess kernel fusion"),
     ("roofline", "§Roofline: dry-run derived terms"),

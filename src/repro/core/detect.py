@@ -65,7 +65,16 @@ RNG discipline: batch k uses ``fold_in(key(seed), k)`` and image i of a
 batch uses ``fold_in(batch_key, i)``, so results are bit-identical
 regardless of lane count, execution order, batch padding, or sharding.
 
-The pipeline object is the unit the benchmarks (Fig. 6/7/8/9) drive.
+Adaptive multi-tile escalation (``cfg.escalate_tiles > 1``, see
+docs/detection.md): every engine runs the unchanged single-tile round
+first, then re-decodes only RS failures (or thin-margin decodes,
+``cfg.escalate_margin``) on up to k-1 additional non-colliding tiles
+of the per-image plan, accumulating soft bits between RS attempts
+(:meth:`repro.core.stages.StageRegistry.escalate`).  Results gain a
+``tiles_used`` column; with ``escalate_tiles=1`` nothing changes, bit
+for bit.
+
+The pipeline object is the unit the benchmarks (Fig. 6-10, 12) drive.
 """
 from __future__ import annotations
 
@@ -88,6 +97,22 @@ from repro.core.rs.codec import DEFAULT_CODE, RSCode
 
 @dataclasses.dataclass
 class DetectionConfig:
+    """Configuration shared by every detection engine.
+
+    RNG/bit-identity contract: all randomness (tile choice, escalation
+    plans) derives from ``seed`` via ``fold_in`` — batch k uses
+    ``fold_in(key(seed), k)``, image i of a batch ``fold_in(batch_key,
+    i)`` — so for a fixed config the same images produce bitwise equal
+    results on every engine, lane count, padding, or sharding.
+
+    Escalation knobs (see ``stages.EscalationPolicy`` and
+    ``docs/detection.md``): ``escalate_tiles`` is the per-image tile
+    budget — 1 (default) disables escalation and keeps every engine
+    bit-identical to the single-tile pipeline; k > 1 re-decodes failed
+    images on up to k-1 additional non-colliding tiles, accumulating
+    soft bits between RS attempts.  ``escalate_margin`` > 0 also
+    escalates images whose mean |logit| is below the margin even when
+    RS formally succeeded."""
     tile: int = 64
     img_size: int = 256
     resize_src: int = 288          # raw -> resize -> centercrop(img_size)
@@ -102,6 +127,8 @@ class DetectionConfig:
     interleave: bool = True
     rs_threads: int = 32
     lane_budget: int = 8
+    escalate_tiles: int = 1        # max tiles/image (1 = no escalation)
+    escalate_margin: float = 0.0   # mean-|logit| floor (0 = RS-only)
     seed: int = 0
 
 
@@ -152,14 +179,20 @@ class DetectionPipeline:
         """(msg, ok, ncorr) via the registry's configured RS engine."""
         return self.stages.rs_correct(bits)
 
-    def _finish(self, msg, ok, ncorr, logits, b) -> Dict[str, np.ndarray]:
-        """The sink: the single place device arrays become numpy."""
+    def _finish(self, msg, ok, ncorr, logits, b,
+                tiles_used=None) -> Dict[str, np.ndarray]:
+        """The sink: the single place device arrays become numpy.
+        ``tiles_used`` (escalation round counts) is reported only when
+        escalation is configured, so ``escalate_tiles=1`` results keep
+        the exact pre-escalation schema."""
         with self._stats_lock:
             self.stats["batches"] += 1
             self.stats["images"] += b
         out = {"message_bits": np.asarray(msg), "ok": np.asarray(ok),
                "n_corrected": np.asarray(ncorr),
                "logits": np.asarray(logits)}
+        if tiles_used is not None and self.stages.policy.enabled:
+            out["tiles_used"] = np.asarray(tiles_used)
         if self.gt is not None:
             out["match"] = np.all(
                 out["message_bits"] == self.gt[None, : msg.shape[1]],
@@ -167,8 +200,20 @@ class DetectionPipeline:
         return out
 
     # ------------------------------------------------------------------
-    def detect_batch(self, raw_batch, *, key=None) -> Dict[str, np.ndarray]:
-        """Synchronous detection of one raw uint8 image batch."""
+    def detect_batch(self, raw_batch, *, key=None,
+                     true_b: Optional[int] = None
+                     ) -> Dict[str, np.ndarray]:
+        """Synchronous detection of one raw uint8 image batch.
+
+        ``key`` defaults to the offline discipline
+        (``fold_in(key(seed), batch_seq)``); per-image keys derive from
+        it, so explicit keys make results independent of call order.
+        With ``escalate_tiles > 1`` the adaptive escalation loop runs
+        after the (unchanged) single-tile round; the result gains a
+        ``tiles_used`` column and ``logits`` become the accumulated
+        soft bits for escalated images.  Callers that padded the batch
+        (bucket shaping) pass ``true_b`` so pad rows never escalate
+        (they repeat the last real image and get sliced off anyway)."""
         b = raw_batch.shape[0]
         if key is None:
             key = self._batch_key(self._seq)
@@ -182,7 +227,12 @@ class DetectionPipeline:
             x, keys = self._ingest(raw_batch, key)
             logits = self._decode_x(x, keys)
             msg, ok, ncorr = self._rs_correct(self._bits(logits))
-        return self._finish(msg, ok, ncorr, logits, b)
+        tiles_used = None
+        if self.stages.policy.enabled:
+            msg, ok, ncorr, logits, tiles_used = \
+                self.stages.escalate_prefix(
+                    raw_batch, keys, msg, ok, ncorr, logits, true_b)
+        return self._finish(msg, ok, ncorr, logits, b, tiles_used)
 
     # -- stage graph ----------------------------------------------------
     def default_lanes(self) -> Dict[str, int]:
@@ -202,7 +252,7 @@ class DetectionPipeline:
         """Registry stage-graph sink for the offline engines."""
         logits = p["logits"]
         return self._finish(p["msg"], p["ok"], p["ncorr"], logits,
-                            logits.shape[0])
+                            logits.shape[0], p.get("tiles_used"))
 
     def build_stages(self, lanes: Optional[Dict[str, int]] = None
                      ) -> List[lanes_lib.Stage]:
@@ -223,9 +273,20 @@ class DetectionPipeline:
                    ) -> dict:
         """Detect a stream of batches; returns throughput metrics.
 
+        RNG/bit-identity contract: batch i of the stream uses key
+        ``fold_in(key(cfg.seed), seq0 + i)`` (the pipeline's running
+        sequence counter), and per-image keys derive from it — so for
+        ANY lane configuration the results equal serial
+        :meth:`detect_batch` calls over the same stream, bitwise,
+        escalation included.
+
         ``lanes``: None -> lane executor with :meth:`default_lanes` for
         qrmark (plain prefetch loop otherwise); int n -> n decode + n RS
         lanes; dict -> explicit per-stage lane counts.
+
+        Stream items are raw batches, or ``(raw, true_b)`` tuples when
+        the feeder padded them — pad rows then never escalate (the
+        consumer is expected to slice results to ``true_b``).
 
         ``on_result(i, res)`` fires as result ``i`` is consumed from the
         executor — the hook latency monitors need (a completion recorded
@@ -244,11 +305,16 @@ class DetectionPipeline:
             seq0 = self._seq
 
             def feed():
-                for i, raw in enumerate(batches):
+                for i, item in enumerate(batches):
+                    raw, tb = (item if isinstance(item, tuple)
+                               else (item, None))
                     bkey = self._batch_key(seq0 + i)
-                    yield {"raw": raw, "seq": seq0 + i,
-                           "keys": self.stages.image_keys(
-                               bkey, raw.shape[0])}
+                    p = {"raw": raw, "seq": seq0 + i,
+                         "keys": self.stages.image_keys(
+                             bkey, raw.shape[0])}
+                    if tb is not None:
+                        p["true_b"] = tb
+                    yield p
 
             for r in ex.run(feed()):
                 if on_result is not None:
@@ -261,8 +327,10 @@ class DetectionPipeline:
             it = interleave.interleaved(
                 batches, prepare=None,
                 enabled=(cfg.interleave and cfg.mode == "qrmark"))
-            for raw in it:
-                r = self.detect_batch(raw)
+            for item in it:
+                raw, tb = (item if isinstance(item, tuple)
+                           else (item, None))
+                r = self.detect_batch(raw, true_b=tb)
                 if on_result is not None:
                     on_result(len(results), r)
                 results.append(r)
@@ -315,7 +383,15 @@ class DetectionPipeline:
             msg, ok, ncorr = (a[:b] for a in self._rs_correct(bits))
         else:
             msg, ok, ncorr = self._rs_correct(np.asarray(bits)[:b])
-        return self._finish(msg, ok, ncorr, np.asarray(logits)[:b], b)
+        logits_b = np.asarray(logits)[:b]
+        tiles_used = None
+        if self.stages.policy.enabled:
+            # escalation runs unsharded on the true-size failing subset
+            # (sub-batches are small); keys stay the padded batch's
+            # per-image keys, so tile plans match the single-device path
+            msg, ok, ncorr, logits_b, tiles_used = self.stages.escalate(
+                raw_np[:b], keys[:b], msg, ok, ncorr, logits_b)
+        return self._finish(msg, ok, ncorr, logits_b, b, tiles_used)
 
     def close(self):
         self.stages.close()

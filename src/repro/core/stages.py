@@ -30,8 +30,9 @@ batched together.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -69,6 +70,53 @@ def make_device_rs(code: RSCode) -> Callable:
     return jax_rs.make_batch_decoder(code)
 
 
+def _pad_pow2(arr, axis: int = 0):
+    """Pad ``arr`` along ``axis`` up to the next power of two by
+    repeating the last row; returns (padded, true_n).  Escalation
+    sub-batches shrink round over round — pow2 buckets bound the number
+    of jit shapes no matter how many images fail each round."""
+    n = arr.shape[axis]
+    target = 1
+    while target < n:
+        target *= 2
+    if target == n:
+        return arr, n
+    reps = [arr] + [arr[n - 1: n]] * (target - n)
+    if isinstance(arr, np.ndarray):
+        return np.concatenate(reps, axis=axis), n
+    return jnp.concatenate(reps, axis=axis), n
+
+
+@dataclasses.dataclass(frozen=True)
+class EscalationPolicy:
+    """When and how far to escalate beyond the single-tile fast path
+    (``DetectionConfig.escalate_tiles`` / ``escalate_margin``).
+
+    ``max_tiles`` is the per-image tile budget (= max escalation
+    rounds: round r decodes tile r of the per-image plan, so an image
+    uses between 1 and ``max_tiles`` tiles).  An image escalates after
+    a round when RS failed on its accumulated soft bits, or — with
+    ``margin > 0`` — when the mean absolute accumulated logit is below
+    ``margin`` (a thin verification margin, even if RS formally
+    succeeded).  ``max_tiles == 1`` disables escalation entirely: no
+    plan is derived and every engine's hot path is bit-identical to a
+    pipeline built before this policy existed."""
+    max_tiles: int = 1
+    margin: float = 0.0
+
+    @property
+    def enabled(self) -> bool:
+        return self.max_tiles > 1
+
+    def wants_escalation(self, ok, logits) -> np.ndarray:
+        """Per-image bool mask over (ok, accumulated logits)."""
+        need = ~np.asarray(ok, bool)
+        if self.margin > 0.0:
+            need = need | (np.abs(np.asarray(logits)).mean(axis=-1)
+                           < self.margin)
+        return need
+
+
 class StageRegistry:
     """The detection stage functions, built once per (cfg, params).
 
@@ -84,6 +132,29 @@ class StageRegistry:
             raise ValueError(f"unknown rs_mode {cfg.rs_mode!r}")
         if cfg.decode_dtype not in extractor_lib.DECODE_DTYPES:
             raise ValueError(f"unknown decode_dtype {cfg.decode_dtype!r}")
+        k = getattr(cfg, "escalate_tiles", 1)
+        if k < 1:
+            raise ValueError(f"escalate_tiles must be >= 1, got {k}")
+        if getattr(cfg, "escalate_margin", 0.0) > 0.0 and k == 1:
+            raise ValueError(
+                "escalate_margin > 0 has no effect with "
+                "escalate_tiles=1 — the margin trigger only fires "
+                "when there is a tile budget to escalate into; set "
+                "escalate_tiles > 1 (or margin to 0)")
+        if k > 1:
+            if cfg.mode == "sequential":
+                raise ValueError(
+                    "escalate_tiles > 1 needs a tile-decoding mode "
+                    "(tiled/qrmark); sequential decodes the full image")
+            cap = tiling.max_escalation_tiles(
+                cfg.strategy, (cfg.img_size, cfg.img_size), cfg.tile)
+            if k > cap:
+                raise ValueError(
+                    f"escalate_tiles={k} exceeds the {cap} distinct "
+                    f"{cfg.strategy!r} tiles of a {cfg.img_size}^2/"
+                    f"{cfg.tile}^2 image")
+        self.policy = EscalationPolicy(
+            max_tiles=k, margin=getattr(cfg, "escalate_margin", 0.0))
         self.cfg = cfg
         self.params = params
         self.code = cfg.code
@@ -164,6 +235,51 @@ class StageRegistry:
         self.ingest_keyed = jax.jit(ingest_keyed)
         self.decode_keyed = jax.jit(decode_keyed)
         self.bits = jax.jit(lambda logits: (logits > 0).astype(jnp.int32))
+
+        # -- escalation compute (cfg.escalate_tiles > 1) ---------------
+        # The per-image k-tile plan depends only on the keys and static
+        # geometry; column 0 is bit-identical to the single-tile draw,
+        # so round 1 IS the unmodified fast path and rounds 2..k decode
+        # plan columns 1..k-1.
+        def plan_fn(keys):
+            return tiling.escalation_offsets(
+                cfg.strategy, keys, (cfg.img_size, cfg.img_size),
+                cfg.tile, self.policy.max_tiles)
+
+        def tiles_at(raw, offs):
+            """(b, 2) or (b, k, 2) offsets -> decode-ready tiles, via
+            the tile-first kernel or the staged preprocess + extract."""
+            if self.tile_first:
+                from repro.kernels import ops as kops
+                return kops.fused_tile_preprocess(
+                    raw, offs, resize=cfg.resize_src, crop=cfg.img_size,
+                    tile=cfg.tile)
+            x = preprocess(raw)
+            if offs.ndim == 3:
+                return tiling.extract_tiles_k(x, offs, cfg.tile)
+            return tiling.extract_tiles(x, offs, cfg.tile)
+
+        def decode_all_fn(raw, keys):
+            p = plan_fn(keys)
+            b, kk = p.shape[:2]
+            return extract(tiles_at(raw, p)).reshape(b, kk, -1)
+
+        self.escalation_plan = jax.jit(plan_fn)
+        # tile r of the escalation plan, decode-ready — the
+        # escalation-round ingest for BOTH the inline loop and the
+        # server's re-submitted micro-batches (one jitted fn, so the
+        # two escalation engines cannot drift).  The round index is
+        # TRACED (dynamic_index into the plan), so one compile per
+        # sub-batch shape covers every round — which keeps warmup and
+        # the first escalation cheap.
+        self.escalation_tiles = jax.jit(
+            lambda raw, keys, r: tiles_at(raw, plan_fn(keys)[:, r]))
+        # decode-ready tiles -> logits (the escalation-round decode)
+        self.decode_tiles = jax.jit(extract)
+        # all k tiles at once -> (b, k, n_bits): the always-k baseline
+        # and the (b, k, 2) kernel fast path
+        self.decode_all_keyed = jax.jit(decode_all_fn)
+
         self._image_keys_jit = jax.jit(
             lambda key, b: jax.vmap(
                 lambda i: jax.random.fold_in(key, i))(jnp.arange(b)),
@@ -190,7 +306,10 @@ class StageRegistry:
                 bits = (logits > 0).astype(jnp.int32)
                 return dev_decoder(bits), logits
 
-            donate = () if jax.default_backend() == "cpu" else (0,)
+            # escalation re-reads the raw batch after round 1, so the
+            # buffer can only be donated when escalation is off
+            donate = (() if jax.default_backend() == "cpu"
+                      or self.policy.enabled else (0,))
             self.fused_keyed = jax.jit(fused_keyed, donate_argnums=donate)
         else:
             self.fused_keyed = None
@@ -230,10 +349,91 @@ class StageRegistry:
                     rs_out["n_corrected"])
         return self._rs_host(np.asarray(bits))
 
+    # -- adaptive multi-tile escalation --------------------------------
+    def escalate_round(self, raw, keys, r: int):
+        """Soft bits of escalation-plan tile ``r``: the two jitted
+        escalation stage fns composed — literally the fns the server's
+        re-submitted rounds run, so the inline loop and the online
+        escalation path cannot drift bitwise."""
+        return self.decode_tiles(self.escalation_tiles(raw, keys, r))
+
+    def escalate(self, raw, keys, msg, ok, ncorr, logits
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                            np.ndarray, np.ndarray]:
+        """Adaptive escalation after a completed round 1: images whose
+        RS failed (or whose margin is thin — :class:`EscalationPolicy`)
+        are re-decoded on tile r of their plan each round, soft bits
+        (logits) are ACCUMULATED across tiles, and RS re-runs on the
+        accumulated signs, until every image settles or the
+        ``max_tiles`` budget is spent.
+
+        Host-orchestrated: each round gathers only the still-failing
+        images into a pow2-padded sub-batch (bounded jit shapes) and
+        drives the same jitted tile/decode/RS engines as round 1, so
+        per-image results are bit-identical no matter which engine ran
+        round 1 or how failures were sub-batched (every op in the path
+        is batch-stable).  Returns (msg, ok, ncorr, accumulated_logits,
+        tiles_used) as numpy arrays; with ``escalate_tiles == 1`` the
+        inputs pass through untouched (tiles_used all ones)."""
+        b = np.asarray(ok).shape[0]
+        tiles_used = np.ones(b, np.int32)
+        if not self.policy.enabled:
+            return (np.asarray(msg), np.asarray(ok), np.asarray(ncorr),
+                    np.asarray(logits), tiles_used)
+        msg = np.asarray(msg).copy()
+        ok = np.asarray(ok).copy()
+        ncorr = np.asarray(ncorr).copy()
+        acc = np.asarray(logits, np.float32).copy()
+        raw_np = np.asarray(raw)
+        need = self.policy.wants_escalation(ok, acc)
+        for r in range(1, self.policy.max_tiles):
+            idx = np.nonzero(need)[0]
+            if idx.size == 0:
+                break
+            sub_raw, n = _pad_pow2(raw_np[idx])
+            sub_keys, _ = _pad_pow2(keys[idx])
+            new_logits = np.asarray(
+                self.escalate_round(sub_raw, sub_keys, r))[:n]
+            acc[idx] += new_logits
+            sub_acc, _ = _pad_pow2(acc[idx])
+            m2, o2, c2 = self.rs_correct(
+                (sub_acc > 0).astype(np.int32))
+            m2, o2, c2 = (np.asarray(a)[:n] for a in (m2, o2, c2))
+            msg[idx], ok[idx], ncorr[idx] = m2, o2, c2
+            tiles_used[idx] = r + 1
+            need[:] = False
+            need[idx] = self.policy.wants_escalation(o2, acc[idx])
+        return msg, ok, ncorr, acc, tiles_used
+
+    def escalate_prefix(self, raw, keys, msg, ok, ncorr, logits,
+                        true_b: Optional[int] = None):
+        """:meth:`escalate` restricted to the first ``true_b`` rows of
+        a padded batch: pad rows (repeats of the last real image) keep
+        their round-1 results and never consume escalation rounds.
+        Returns full-size arrays either way — the one scatter shared by
+        ``detect_batch`` and the stage-graph rs sink."""
+        b = np.asarray(ok).shape[0]
+        tb = b if true_b is None else min(true_b, b)
+        if tb >= b:
+            return self.escalate(raw, keys, msg, ok, ncorr, logits)
+        m, o, c, lg, tu = self.escalate(
+            raw[:tb], keys[:tb], msg[:tb], ok[:tb], ncorr[:tb],
+            logits[:tb])
+        msg = np.asarray(msg).copy()
+        ok = np.asarray(ok).copy()
+        ncorr = np.asarray(ncorr).copy()
+        logits = np.asarray(logits, np.float32).copy()
+        tiles = np.ones(b, np.int32)
+        msg[:tb], ok[:tb], ncorr[:tb] = m, o, c
+        logits[:tb], tiles[:tb] = lg, tu
+        return msg, ok, ncorr, logits, tiles
+
     # -- the stage graph ---------------------------------------------------
     def build_stages(self, lanes: Dict[str, int],
                      finish: Optional[Callable[[dict], Any]] = None,
-                     depth: int = 2) -> List[lanes_lib.Stage]:
+                     depth: int = 2,
+                     escalate_inline: bool = True
+                     ) -> List[lanes_lib.Stage]:
         """The detection stage graph — THE payload contract every
         executor-driven engine (offline run_stream, online server)
         shares.
@@ -246,20 +446,52 @@ class StageRegistry:
         device array (jitted stage fns return futures); ``finish(p)``
         is the sink — the one place device arrays should become numpy.
         Extra payload fields (request slots, timestamps) flow through
-        untouched."""
+        untouched.
+
+        Escalation: payloads may carry ``round`` (int, default 0) and
+        ``acc_logits``.  A round-r > 0 payload ingests tile r of each
+        image's escalation plan and decode ADDS the new soft bits onto
+        ``acc_logits`` — the form the online server's re-submitted
+        escalation micro-batches take.  With ``escalate_inline=True``
+        (the offline engines) round-0 payloads instead run the whole
+        adaptive loop synchronously on the rs lane via
+        :meth:`escalate`, annotating the payload with ``tiles_used``."""
 
         def st_ingest(p):
-            p["x"] = self.ingest_keyed(jax.device_put(p["raw"]),
-                                       p["keys"])
+            r = p.get("round", 0)
+            raw = jax.device_put(p["raw"])
+            if r > 0:
+                # escalation round: ingest emits tile r of the plan
+                # directly (decode-ready), whatever the ingest mode
+                p["x"] = self.escalation_tiles(raw, p["keys"], r)
+            else:
+                p["x"] = self.ingest_keyed(raw, p["keys"])
             return p
 
         def st_decode(p):
-            p["logits"] = self.decode_keyed(p["x"], p["keys"])
+            if p.get("round", 0) > 0:
+                logits = self.decode_tiles(p["x"])
+            else:
+                logits = self.decode_keyed(p["x"], p["keys"])
+            if p.get("acc_logits") is not None:
+                logits = logits + jnp.asarray(p["acc_logits"])
+            p["logits"] = logits
             return p
 
         def st_rs(p):
             p["msg"], p["ok"], p["ncorr"] = self.rs_correct(
                 self.bits(p["logits"]))
+            if (escalate_inline and self.policy.enabled
+                    and p.get("round", 0) == 0):
+                # payloads from padded feeders carry "true_b": only the
+                # real rows escalate (pad rows repeat the last real
+                # image — escalating them would multiply every round's
+                # decode/RS work by the pad factor for nothing; the
+                # consumer slices them off anyway)
+                (p["msg"], p["ok"], p["ncorr"], p["logits"],
+                 p["tiles_used"]) = self.escalate_prefix(
+                    p["raw"], p["keys"], p["msg"], p["ok"], p["ncorr"],
+                    p["logits"], p.get("true_b"))
             return finish(p) if finish is not None else p
 
         return [

@@ -43,6 +43,22 @@ def extract_tiles(images, offsets, tile: int):
     return jax.vmap(one)(images, offsets)
 
 
+def extract_tiles_k(images, plans, tile: int):
+    """k-tile generalisation of :func:`extract_tiles`: images
+    (b, H, W, C) + plans (b, k, 2) -> (b*k, tile, tile, C), image-major
+    (rows [i*k, (i+1)*k) are image i's tiles — the layout of the
+    ``(b, k, 2)`` tile-first kernel form, whose oracle and the staged
+    escalation path both call this)."""
+    b, k = plans.shape[:2]
+
+    def one(img, offs):
+        return jax.vmap(lambda o: jax.lax.dynamic_slice(
+            img, (o[0], o[1], 0), (tile, tile, img.shape[-1])))(offs)
+
+    tiles = jax.vmap(one)(images, jnp.asarray(plans, jnp.int32))
+    return tiles.reshape(b * k, tile, tile, images.shape[-1])
+
+
 def select_tiles(strategy: str, key, images, tile: int):
     b, H, W, _ = images.shape
     offs = tile_offsets(strategy, key, (H, W), tile, b)
@@ -98,6 +114,97 @@ def tile_first_offsets(strategy: str, keys, *, img_size: int, tile: int):
     :func:`per_image_offsets`, so the tile-first and staged paths pick
     the same tile for every image."""
     return per_image_offsets(strategy, keys, (img_size, img_size), tile)
+
+
+# fold_in salt for the extra escalation tile draws: keeps columns 1..k-1
+# statistically independent of the column-0 draw without disturbing it
+_ESC_SALT = 0x5AFE
+
+
+def max_escalation_tiles(strategy: str, image_hw, tile: int) -> int:
+    """Largest usable ``k`` for :func:`escalation_offsets`.
+
+    Grid-aligned strategies (``random_grid``, ``fixed``) cannot exceed
+    the number of grid cells; ``random`` can draw any number of
+    (possibly overlapping) windows."""
+    H, W = image_hw
+    if strategy in ("random_grid", "fixed"):
+        return max(1, (H // tile) * (W // tile))
+    return 2 ** 30
+
+
+def escalation_offsets(strategy: str, keys, image_hw, tile: int, k: int):
+    """Per-image k-tile escalation plans: ``(b, k, 2)`` int32 offsets
+    driven by one PRNG key per image.
+
+    The bit-identity contract: **column 0 equals**
+    :func:`per_image_offsets` (and therefore
+    :func:`tile_first_offsets`) **bit for bit** — escalation round 1
+    decodes exactly the tile the single-tile pipeline picks, so a
+    pipeline with ``escalate_tiles == 1`` and one with ``k > 1`` whose
+    round-1 RS succeeds produce identical results.  Extra columns:
+
+    * ``random_grid`` — the remaining grid cells in a per-image
+      permuted order (``fold_in(key, salt)``-driven), so no cell is
+      ever decoded twice for one image; requires ``k <= gy * gx``;
+    * ``fixed`` — grid cells in raster order from the top-left
+      (deterministic, distinct); requires ``k <= gy * gx``;
+    * ``random`` — independent fresh draws from
+      ``fold_in(key, salt + j)`` (the strategy permits overlapping
+      windows by construction).
+
+    Like every key-driven draw here, image i's plan depends only on
+    ``keys[i]`` and the static geometry — never on batch size, padding,
+    sharding, or pixel data — so escalation plans can be derived before
+    ingest and are identical across every execution engine."""
+    H, W = image_hw
+    if k < 1:
+        raise ValueError(f"escalation needs k >= 1, got {k}")
+    cap = max_escalation_tiles(strategy, image_hw, tile)
+    if k > cap:
+        raise ValueError(
+            f"strategy {strategy!r} on {H}x{W}/{tile} supports at most "
+            f"{cap} distinct tiles, got k={k}")
+    # column 0 is per_image_offsets' OWN output (not a re-derivation),
+    # so the round-1 contract holds by construction even if the base
+    # draw ever changes
+    col0 = per_image_offsets(strategy, keys, image_hw, tile)
+    if strategy == "fixed":
+        b = keys.shape[0]
+        gx = W // tile
+        cells = jnp.arange(k, dtype=jnp.int32)
+        offs = jnp.stack([cells // gx, cells % gx], axis=1) * tile
+        plan = jnp.broadcast_to(offs[None], (b, k, 2)).astype(jnp.int32)
+        return plan.at[:, 0].set(col0)   # == cell 0 today; by contract
+    if strategy == "random":
+        extra = [per_image_offsets(
+                     strategy,
+                     jax.vmap(lambda kk, j=j: jax.random.fold_in(
+                         kk, _ESC_SALT + j))(keys),
+                     image_hw, tile)
+                 for j in range(1, k)]
+        return jnp.stack([col0, *extra], axis=1)
+    if strategy == "random_grid":
+        gy, gx = H // tile, W // tile
+        n_cells = gy * gx
+        c0 = (col0[:, 0] // tile) * gx + col0[:, 1] // tile
+
+        def rest(key, c0_i):
+            perm = jax.random.permutation(
+                jax.random.fold_in(key, _ESC_SALT), n_cells)
+            # stable-compact c0 out of the permutation: jnp.argsort is
+            # stable, so the non-c0 cells keep their permuted relative
+            # order and c0 sinks to the end
+            order = jnp.argsort((perm == c0_i).astype(jnp.int32))
+            cells = perm[order][: k - 1]
+            return (jnp.stack([cells // gx, cells % gx], axis=1)
+                    * tile).astype(jnp.int32)
+
+        if k == 1:
+            return col0[:, None, :]
+        extra = jax.vmap(rest)(keys, c0)
+        return jnp.concatenate([col0[:, None, :], extra], axis=1)
+    raise ValueError(f"unknown tiling strategy {strategy!r}")
 
 
 def grid_partition(images, tile: int):

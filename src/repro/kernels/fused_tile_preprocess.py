@@ -24,6 +24,13 @@ applied as a vmapped ``dynamic_slice`` over the shared (crop, H)/(W, crop)
 matrices on the way into the kernel; the kernel itself is two small MXU
 matmuls per channel per grid step and writes the (b, l, l, 3) decode
 input directly — the full preprocessed image is never materialised.
+
+Multi-tile escalation form: offsets may also be (b, k, 2) — k tiles per
+image (``tiling.escalation_offsets`` plans).  The grid becomes b*k steps
+whose image block index is ``step // k``, so each raw image is read k
+times from its single HBM copy (never replicated host-side) and the
+kernel emits (b*k, l, l, 3) tile-major per image — escalated tiles ride
+exactly the same MXU path as the single-tile hot path.
 """
 from __future__ import annotations
 
@@ -61,35 +68,45 @@ def slice_interp_matrices(offsets, *, H: int, W: int, resize: int,
 def fused_tile_preprocess(raw, offsets, *, resize: int = 256,
                           crop: int = 256, tile: int = 64,
                           mean=None, std=None, interpret: bool = True):
-    """uint8 (b, H, W, 3) + tile offsets (b, 2) -> f32 (b, tile, tile, 3).
+    """uint8 (b, H, W, 3) + tile offsets -> f32 tiles.
 
-    Output equals ``extract_tiles(fused_preprocess(raw), offsets, tile)``
+    ``offsets`` is (b, 2) — one tile per image, output
+    (b, tile, tile, 3) — or (b, k, 2) — a k-tile escalation plan per
+    image, output (b*k, tile, tile, 3) flattened image-major (rows
+    [i*k, (i+1)*k) are image i's tiles).  Either way each output tile
+    equals ``extract_tiles(fused_preprocess(raw), <its offset>, tile)``
     bit for bit, without materialising the (b, crop, crop, 3)
-    intermediate.  interpret=True executes on CPU (this container);
-    interpret=False is the TPU target.  Not jitted here: callers jit
-    around it (the interpolation matrices are host constants).
+    intermediate; the multi-tile grid reads each raw image block k
+    times rather than replicating it.  interpret=True executes on CPU
+    (this container); interpret=False is the TPU target.  Not jitted
+    here: callers jit around it (the interpolation matrices are host
+    constants).
     """
     mean = np.asarray(IMAGENET_MEAN if mean is None else mean, np.float32)
     std = np.asarray(IMAGENET_STD if std is None else std, np.float32)
     b, H, W, C = raw.shape
     assert C == 3
     assert tile <= crop, f"tile {tile} exceeds crop {crop}"
+    offsets = jnp.asarray(offsets, jnp.int32)
+    k = offsets.shape[1] if offsets.ndim == 3 else 1
+    n = b * k
     ry_t, rx_t = slice_interp_matrices(
-        offsets, H=H, W=W, resize=resize, crop=crop, tile=tile)
+        offsets.reshape(n, 2), H=H, W=W, resize=resize, crop=crop,
+        tile=tile)
     scale = jnp.asarray(1.0 / (255.0 * std))
     bias = jnp.asarray(-mean / std)
 
     return pl.pallas_call(
         _kernel,
-        grid=(b,),
+        grid=(n,),
         in_specs=[
-            pl.BlockSpec((1, H, W, 3), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, H, W, 3), lambda i: (i // k, 0, 0, 0)),
             pl.BlockSpec((1, tile, H), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, W, tile), lambda i: (i, 0, 0)),
             pl.BlockSpec((3,), lambda i: (0,)),
             pl.BlockSpec((3,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((1, tile, tile, 3), lambda i: (i, 0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, tile, tile, 3), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n, tile, tile, 3), jnp.float32),
         interpret=interpret,
     )(raw, ry_t, rx_t, scale, bias)

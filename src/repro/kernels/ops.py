@@ -27,7 +27,10 @@ def fused_tile_preprocess(raw, offsets, *, resize: int = 256,
                           mean=None, std=None):
     """Tile-first fused ingest: Resize->Crop->Normalize->Tile-extract in
     one kernel — the (b, tile, tile, 3) decode input directly, bit-equal
-    to ``fused_preprocess`` + ``tiling.extract_tiles`` at ``offsets``."""
+    to ``fused_preprocess`` + ``tiling.extract_tiles`` at ``offsets``.
+    Offsets may also be a (b, k, 2) escalation plan, emitting
+    (b*k, tile, tile, 3) image-major so escalated tiles ride the same
+    MXU path (see ``tiling.escalation_offsets``)."""
     interpret = jax.default_backend() != "tpu"
     return _fused_tile_preprocess(raw, offsets, resize=resize, crop=crop,
                                   tile=tile, mean=mean, std=std,

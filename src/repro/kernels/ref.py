@@ -55,15 +55,16 @@ def fused_preprocess_ref(raw, *, resize: int, crop: int,
 def fused_tile_preprocess_ref(raw, offsets, *, resize: int, crop: int,
                               tile: int, mean=None, std=None):
     """Oracle for the tile-first ingest kernel: full staged preprocess
-    followed by per-image tile extraction at ``offsets``."""
+    followed by per-image tile extraction at ``offsets``.  Accepts the
+    kernel's both offset forms: (b, 2) -> (b, tile, tile, 3) and the
+    (b, k, 2) escalation plan -> (b*k, tile, tile, 3) image-major."""
+    from repro.core import tiling
     full = fused_preprocess_ref(raw, resize=resize, crop=crop, mean=mean,
                                 std=std)
-
-    def one(img, off):
-        return jax.lax.dynamic_slice(
-            img, (off[0], off[1], 0), (tile, tile, img.shape[-1]))
-
-    return jax.vmap(one)(full, jnp.asarray(offsets, jnp.int32))
+    offsets = jnp.asarray(offsets, jnp.int32)
+    if offsets.ndim == 3:
+        return tiling.extract_tiles_k(full, offsets, tile)
+    return tiling.extract_tiles(full, offsets, tile)
 
 
 # ---------------------------------------------------------------------------

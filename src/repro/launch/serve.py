@@ -147,9 +147,11 @@ class DetectionService:
                 work.append(pad_to_bucket(raw, self.pad_bucket))
 
         def feed():
-            for tid, (sl, _) in enumerate(work):
+            for tid, (sl, tb) in enumerate(work):
                 mon.start(tid)
-                yield sl
+                # (padded slice, true size): pad rows stay escalation-
+                # inert and consume() slices them off the results
+                yield (sl, tb)
 
         n_img_box = [0]
 
@@ -287,6 +289,11 @@ def run_online(cfg: DetectionConfig, params, *, qps: float,
         "lanes": stats["lanes"],
         "straggler_retries": stats["straggler_retries"],
     }
+    if srv.registry.policy.enabled:
+        report["escalation_rate"] = round(stats["escalation_rate"], 4)
+        report["escalation_batches"] = stats["escalation_batches"]
+        report["mean_tiles_per_image"] = round(
+            stats.get("tiles_per_image", {}).get("mean", 1.0), 3)
     return report
 
 
@@ -358,6 +365,16 @@ def main():
     ap.add_argument("--realloc-every", type=int, default=0,
                     help="re-run Algorithm 1 on measured stage "
                          "latencies every N micro-batches (0 = off)")
+    ap.add_argument("--escalate-tiles", type=int, default=1,
+                    help="adaptive escalation tile budget per image "
+                         "(1 = single-tile fast path only; k > 1 "
+                         "re-decodes RS failures on up to k-1 extra "
+                         "tiles, accumulating soft bits)")
+    ap.add_argument("--escalate-margin", type=float, default=0.0,
+                    help="also escalate images whose mean |logit| is "
+                         "below this margin even when RS succeeded "
+                         "(0 = RS-failure trigger only; requires "
+                         "--escalate-tiles > 1)")
     args = ap.parse_args()
 
     if args.compilation_cache:
@@ -374,7 +391,9 @@ def main():
                           mode=args.mode, rs_mode=args.rs_mode,
                           tile_first=not args.staged_ingest,
                           fused_decode=not args.unfused_decode,
-                          decode_dtype=args.decode_dtype)
+                          decode_dtype=args.decode_dtype,
+                          escalate_tiles=args.escalate_tiles,
+                          escalate_margin=args.escalate_margin)
     if args.online:
         rep = run_online(cfg, params, qps=args.qps,
                          duration_s=args.duration,

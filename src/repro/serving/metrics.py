@@ -4,8 +4,11 @@ percentiles.
 Deliberately dependency-free (no prometheus client in the container):
 a :class:`MetricsRegistry` is a thread-safe dict of counters/gauges
 plus bounded reservoirs for distributions.  ``snapshot()`` renders the
-report the server and the fig11 benchmark consume — queue depth, batch
-occupancy, p50/p95/p99 request latency, throughput.
+report the server and the fig11/fig12 benchmarks consume — queue
+depth, batch occupancy, p50/p95/p99 request latency, throughput, and
+the escalation telemetry (``images_escalated`` / ``escalation_batches``
+counters, the ``tiles_per_image`` distribution; the server derives
+``escalation_rate`` from them in ``stats()``).
 """
 from __future__ import annotations
 

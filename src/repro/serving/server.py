@@ -28,19 +28,36 @@ re-submits micro-batches that exceed the ``StragglerMonitor`` timeout;
 first completion wins) and live lane reallocation (Algorithm 1 re-run
 on *measured* stage latencies, applied with ``LaneExecutor.reconfigure``
 without dropping queued work).
+
+Adaptive escalation online (``DetectionConfig.escalate_tiles > 1``):
+when a micro-batch completes its single-tile round, only the FAILED
+(or thin-margin) images across its requests are regrouped into an
+**escalation micro-batch** — a round-r payload the same stage graph
+ingests as tile r of each image's plan, adding the new soft bits onto
+the carried accumulator — and re-submitted to the executor, round by
+round, until every image settles or the tile budget is spent.
+Escalation batches get the full straggler treatment (monitored,
+speculatively re-executed, first completion wins); requests resolve
+when their last escalating image settles, bit-identical to
+``detect_batch`` of the same images/keys at the same config.
+Escalation rate, per-image tiles, and batch counts are exported
+through the metrics registry (``stats()``).
 """
 from __future__ import annotations
 
 import dataclasses
+import queue
 import threading
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import allocator, lanes as lanes_lib
 from repro.core import scheduler as sched_lib
 from repro.core.detect import DetectionConfig, DetectionPipeline
+from repro.core.stages import _pad_pow2
 from repro.serving.batcher import (AdmissionError, BatcherConfig,
                                    MicroBatcher, pad_to_bucket)
 from repro.serving.metrics import MetricsRegistry
@@ -88,10 +105,36 @@ class RequestHandle:
                 if self.t_done is not None else None)
 
 
+class _SlotState:
+    """Partial results for a request whose images are still escalating:
+    round-1 rows are held here, escalated rows overwrite them as their
+    rounds settle, and the request's handle resolves when the last
+    pending image settles."""
+
+    def __init__(self, slot, rows: Dict[str, np.ndarray], pending: int):
+        self.slot = slot
+        self.rows = {f: np.asarray(v).copy() for f, v in rows.items()}
+        self.tiles_used = np.ones(rows["ok"].shape[0], np.int32)
+        self.pending = pending
+
+
+@dataclasses.dataclass
+class _EscGroup:
+    """One escalation micro-batch: the still-failing images gathered
+    across a completed batch's requests, entering plan-tile ``round``
+    with their accumulated soft bits."""
+    raw: np.ndarray                           # (n, H, W, 3) true rows
+    keys: Any                                 # (n,) typed PRNG keys
+    acc: np.ndarray                           # (n, n_bits) accumulated
+    targets: List[Tuple[_SlotState, int]]     # (state, row) per image
+    round: int                                # plan column this round
+
+
 @dataclasses.dataclass
 class _InFlight:
-    mb: Any                     # MicroBatch
+    mb: Any                     # MicroBatch (round 0) or None
     tid: int
+    esc: Optional[_EscGroup] = None   # escalation round payload
     done: bool = False          # first completion wins (speculative)
 
 
@@ -122,6 +165,13 @@ class DetectionServer:
         self._threads: list = []
         self._lock = threading.Lock()
         self._mon_lock = threading.Lock()   # StragglerMonitor is not
+        self._esc_lock = threading.Lock()   # escalation slot states
+        # escalation groups cross threads through a queue: _on_done runs
+        # on the executor's dispatcher thread, whose blocking submit on
+        # a full first-stage queue would deadlock the whole server (the
+        # dispatcher is what drains those queues) — a dedicated pump
+        # thread does the blocking submit instead
+        self._esc_q: "queue.Queue[_EscGroup]" = queue.Queue()
         self._inflight: Dict[int, _InFlight] = {}   # thread-safe itself
         self._req_seq = 0
         self._tid_seq = 0
@@ -139,9 +189,12 @@ class DetectionServer:
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> "DetectionServer":
+        # escalate_inline=False: the server escalates by re-submitting
+        # round-r micro-batches through this same executor (straggler
+        # coverage + lane concurrency) instead of looping on an rs lane
         stages = self.registry.build_stages(
             self._lanes, finish=self._finish_payload,
-            depth=2 if self.cfg.interleave else 1)
+            depth=2 if self.cfg.interleave else 1, escalate_inline=False)
         for st in stages:
             st.fn = self._timed(st.name, st.fn)
         self._ex = lanes_lib.LaneExecutor(stages, name=self.name).start()
@@ -149,17 +202,24 @@ class DetectionServer:
                                 name=f"{self.name}/pump")
         dog = threading.Thread(target=self._watchdog_loop, daemon=True,
                                name=f"{self.name}/watchdog")
+        esc = threading.Thread(target=self._esc_loop, daemon=True,
+                               name=f"{self.name}/escalation")
         pump.start()
         dog.start()
-        self._threads += [pump, dog]
+        esc.start()
+        self._threads += [pump, dog, esc]
         return self
 
     def warmup(self, sample_image: np.ndarray):
         """Pre-compile the staged stage fns for every pad-bucket shape
         the batcher can emit (up to ``max_batch``) — otherwise each
         bucket's first micro-batch pays cold-start jit inside a served
-        request's latency.  Runs the registry fns directly, off the
-        metrics path."""
+        request's latency.  With escalation enabled the pow2
+        escalation-round shapes are warmed too (the round index is
+        traced, so one compile per shape covers every round) — a cold
+        escalation compile would otherwise land inside a live request's
+        latency and trip the straggler watchdog.  Runs the registry fns
+        directly, off the metrics path."""
         import jax
         cfg = self.batcher.cfg
         reg = self.registry
@@ -182,6 +242,22 @@ class DetectionServer:
             keys = reg.image_keys(reg.base_key, b)
             logits = reg.decode_keyed(reg.ingest_keyed(raw, keys), keys)
             jax.block_until_ready(reg.rs_correct(reg.bits(logits))[0])
+        if reg.policy.enabled:
+            # escalation groups pow2-pad, so warm up to the next power
+            # of two >= the largest round-0 shape (a non-pow2 bucket
+            # can otherwise produce a never-warmed escalation shape)
+            top = 1
+            while top < max(sizes):
+                top *= 2
+            b = 1
+            while b <= top:
+                raw = np.repeat(sample_image[None], b, axis=0)
+                keys = reg.image_keys(reg.base_key, b)
+                logits = reg.decode_tiles(
+                    reg.escalation_tiles(raw, keys, 1))
+                jax.block_until_ready(
+                    reg.rs_correct(reg.bits(logits))[0])
+                b *= 2
         return sorted(set(sizes))
 
     def drain(self, timeout: Optional[float] = None) -> bool:
@@ -214,6 +290,13 @@ class DetectionServer:
         for e in self.batcher.flush():   # never popped by the pump
             self._finish_requests([e.slot], error=RuntimeError(
                 f"{self.name}: server closed before dispatch"))
+        while True:      # escalation groups never picked up by the pump
+            try:
+                g = self._esc_q.get_nowait()
+            except queue.Empty:
+                break
+            self._fail_states(g.targets, RuntimeError(
+                f"{self.name}: server closed before escalation dispatch"))
         self.pipe.close()
         me = threading.current_thread()
         for t in self._threads:
@@ -262,10 +345,19 @@ class DetectionServer:
         return handle
 
     # -- internal: micro-batch dispatch ---------------------------------------
-    def _payload(self, mb) -> dict:
+    def _payload(self, inf: _InFlight) -> dict:
         # a FRESH dict per dispatch: stage fns annotate the payload in
         # place, so a speculative retry must not share the original
-        return {"raw": mb.raw, "keys": mb.keys}
+        if inf.esc is not None:
+            g = inf.esc
+            # pow2-pad the escalation rows (bounded jit shapes); the
+            # pad rows are inert — results sliced to len(targets)
+            raw, _ = _pad_pow2(g.raw)
+            keys, _ = _pad_pow2(g.keys)
+            acc, _ = _pad_pow2(g.acc)
+            return {"raw": raw, "keys": keys, "round": g.round,
+                    "acc_logits": jnp.asarray(acc)}
+        return {"raw": inf.mb.raw, "keys": inf.mb.keys}
 
     def _dispatch(self, inf: _InFlight, *, retry: bool = False):
         if retry:
@@ -273,7 +365,7 @@ class DetectionServer:
         else:
             with self._mon_lock:
                 self.mon.start(inf.tid)
-        self._ex.submit(self._payload(inf.mb),
+        self._ex.submit(self._payload(inf),
                         callback=lambda t, inf=inf: self._on_done(inf, t))
 
     def _pump_loop(self):
@@ -308,7 +400,8 @@ class DetectionServer:
                 "logits": np.asarray(p["logits"])}
 
     def _on_done(self, inf: _InFlight, ticket):
-        """Executor callback (completion order): scatter to requests."""
+        """Executor callback (completion order): scatter to requests,
+        or advance the escalation state machine for round-r batches."""
         with self._lock:
             if inf.done:          # a speculative duplicate lost the race
                 return
@@ -318,21 +411,142 @@ class DetectionServer:
         with self._mon_lock:
             self.mon.complete(inf.tid)
         err = ticket.exception(0)
-        mb = inf.mb
         if err is not None:
-            self._finish_requests([s for s, _, _ in mb.slots], error=err)
+            if inf.esc is not None:
+                self._fail_states(inf.esc.targets, err)
+            else:
+                self._finish_requests([s for s, _, _ in inf.mb.slots],
+                                      error=err)
             return
         res = ticket.result(0)
-        for slot, off, n in mb.slots:
-            slot._resolve({f: res[f][off: off + n]
-                           for f in _RESULT_FIELDS})
-            self.metrics.count("requests_completed")
-            self.metrics.count("images_completed", n)
-            self.metrics.observe("request_latency_s", slot.latency_s)
-        with self._lock:
-            self._finished += len(mb.slots)
+        if inf.esc is not None:
+            with self._esc_lock:
+                self._scatter_escalation(inf.esc, res)
+            return
+        with self._esc_lock:
+            self._scatter_round0(inf.mb, res)
         self.metrics.observe("batch_latency_s",
-                             time.perf_counter() - mb.t_formed)
+                             time.perf_counter() - inf.mb.t_formed)
+
+    def _resolve_request(self, slot, result: Dict[str, np.ndarray]):
+        slot._resolve(result)
+        n = result["message_bits"].shape[0]
+        self.metrics.count("requests_completed")
+        self.metrics.count("images_completed", n)
+        self.metrics.observe("request_latency_s", slot.latency_s)
+        tiles = result.get("tiles_used")
+        if tiles is not None:
+            # counted at resolution (not when escalation starts), so
+            # escalation_rate = images_escalated / images_completed is
+            # a true fraction of COMPLETED images even while rounds are
+            # in flight or after escalation failures
+            self.metrics.count("images_escalated",
+                               int((tiles > 1).sum()))
+            for t in tiles:
+                self.metrics.observe("tiles_per_image", float(t))
+        with self._lock:
+            self._finished += 1
+
+    def _scatter_round0(self, mb, res: Dict[str, np.ndarray]):
+        """Completed single-tile round: resolve settled requests, hold
+        the rest in slot states and regroup their failed images into
+        one escalation micro-batch."""
+        policy = self.registry.policy
+        esc: List[Tuple[_SlotState, int, int]] = []   # (state, row, gidx)
+        for slot, off, n in mb.slots:
+            rows = {f: res[f][off: off + n] for f in _RESULT_FIELDS}
+            if not policy.enabled:
+                self._resolve_request(slot, rows)
+                continue
+            need = policy.wants_escalation(rows["ok"], rows["logits"])
+            if not need.any():
+                self._resolve_request(
+                    slot, {**rows, "tiles_used": np.ones(n, np.int32)})
+                continue
+            state = _SlotState(slot, rows, pending=int(need.sum()))
+            esc.extend((state, int(i), off + int(i))
+                       for i in np.nonzero(need)[0])
+        if esc:
+            gidx = np.asarray([g for _, _, g in esc])
+            self._dispatch_escalation(_EscGroup(
+                raw=np.asarray(mb.raw)[gidx],
+                keys=mb.keys[gidx],
+                acc=np.asarray(res["logits"], np.float32)[gidx],
+                targets=[(s, r) for s, r, _ in esc],
+                round=1))
+
+    def _scatter_escalation(self, g: _EscGroup, res: Dict[str, np.ndarray]):
+        """Completed escalation round: settle images whose RS now
+        succeeds (or whose budget is spent), re-group the rest for the
+        next round with their accumulated soft bits."""
+        policy = self.registry.policy
+        n = len(g.targets)
+        rows = {f: np.asarray(res[f])[:n] for f in _RESULT_FIELDS}
+        need = policy.wants_escalation(rows["ok"], rows["logits"])
+        nxt: List[int] = []
+        for i, (state, row) in enumerate(g.targets):
+            for f in _RESULT_FIELDS:
+                state.rows[f][row] = rows[f][i]
+            state.tiles_used[row] = g.round + 1
+            if need[i] and g.round + 1 < policy.max_tiles:
+                nxt.append(i)
+                continue
+            state.pending -= 1
+            if state.pending == 0:
+                self._resolve_request(
+                    state.slot,
+                    {**state.rows, "tiles_used": state.tiles_used})
+        if nxt:
+            sel = np.asarray(nxt)
+            self._dispatch_escalation(_EscGroup(
+                raw=g.raw[sel], keys=g.keys[sel],
+                acc=rows["logits"][sel],
+                targets=[g.targets[i] for i in nxt],
+                round=g.round + 1))
+
+    def _dispatch_escalation(self, group: _EscGroup):
+        """Hand the group to the escalation pump (never submit from
+        here: callers run on the executor's dispatcher thread, and a
+        blocking submit there wedges the server — the dispatcher is
+        the only consumer of the completion queue)."""
+        self.metrics.count("escalation_batches")
+        self.metrics.observe("escalation_batch_images",
+                             len(group.targets))
+        self._esc_q.put(group)
+
+    def _esc_loop(self):
+        """Escalation pump: pops groups and does the (possibly
+        blocking) executor submit off the dispatcher thread."""
+        while not self._stop.is_set():
+            try:
+                group = self._esc_q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            with self._lock:
+                tid = self._tid_seq
+                self._tid_seq += 1
+                inf = _InFlight(mb=None, tid=tid, esc=group)
+                self._inflight[tid] = inf
+            try:
+                self._dispatch(inf)
+            except RuntimeError as e:   # executor closed under us
+                with self._lock:
+                    inf.done = True
+                    self._inflight.pop(tid, None)
+                self._fail_states(group.targets, e)
+
+    def _fail_states(self, targets, err: BaseException):
+        """Reject every request behind an escalation group that can no
+        longer complete (a request's escalating rows always travel in
+        one group, so each state appears in exactly one group)."""
+        seen: Dict[int, _SlotState] = {}
+        for state, _ in targets:
+            seen.setdefault(id(state), state)
+        for state in seen.values():
+            state.slot._reject(err)
+        self.metrics.count("requests_failed", len(seen))
+        with self._lock:
+            self._finished += len(seen)
 
     # -- straggler mitigation ----------------------------------------
     def _watchdog_loop(self):
@@ -375,6 +589,13 @@ class DetectionServer:
             t0 = time.perf_counter()
             out = fn(p)
             dt = time.perf_counter() - t0
+            if p.get("round", 0) > 0:
+                # escalation rounds are tiny pow2 sub-batches: feeding
+                # them into the EWMA would skew the Algorithm-1 profiles
+                # (and _stage_b) toward a workload the allocator should
+                # not tune for — tracked separately instead
+                self.metrics.observe(f"stage_{name}_esc_s", dt)
+                return out
             with self._lock:
                 prev = self._stage_s.get(name)
                 self._stage_s[name] = (dt if prev is None
@@ -439,4 +660,12 @@ class DetectionServer:
         out["straggler_retries"] = int(
             self.metrics.counter("straggler_retries"))
         out["queue_depth"] = self.batcher.depth()
+        # escalation rate: fraction of completed images that needed
+        # more than their single-tile round (0.0 when escalation off)
+        done = self.metrics.counter("images_completed")
+        out["escalation_rate"] = (
+            self.metrics.counter("images_escalated") / done
+            if done else 0.0)
+        out["escalation_batches"] = int(
+            self.metrics.counter("escalation_batches"))
         return out

@@ -1,0 +1,382 @@
+"""Adaptive multi-tile escalation tests.
+
+Covers the full feature stack: k-tile offset plans (column-0
+bit-identity, non-colliding random_grid cells), the (b, k, 2) tile-first
+kernel form, the EscalationPolicy triggers (RS failure + thin margin),
+bit-identity of every engine at escalate_tiles=1 AND at k>1, and the
+online server's re-submitted escalation micro-batches.
+
+The workload is the correlation-margined synthetic detector also used
+by benchmarks/fig12_escalation.py: encoder and extractor share the
+spread-spectrum pattern bank and the (untrained, noisy) conv/head path
+is zeroed, so logits carry a real margin without trained artifacts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tiling
+from repro.core.detect import DetectionConfig, DetectionPipeline
+from repro.core.extractor import (encoder_forward, init_encoder,
+                                  init_extractor)
+from repro.core.rs.codec import DEFAULT_CODE, rs_encode
+from repro.core.stages import EscalationPolicy
+from repro.data.pipeline import synth_image
+from repro.kernels.fused_tile_preprocess import fused_tile_preprocess
+from repro.kernels.ref import fused_tile_preprocess_ref
+
+TILE, IMG, B = 16, 48, 6
+_FIELDS = ("message_bits", "ok", "n_corrected", "logits")
+
+
+def _keys(n, seed=0):
+    return jax.vmap(lambda i: jax.random.fold_in(
+        jax.random.key(seed), i))(jnp.arange(n))
+
+
+# ---------------------------------------------------------------------------
+# escalation offset plans
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", tiling.STRATEGIES)
+def test_escalation_offsets_column0_is_the_single_tile_draw(strategy):
+    """Round 1 of any escalation plan must decode EXACTLY the tile the
+    single-tile pipeline picks (the bit-identity anchor)."""
+    keys = _keys(7)
+    single = tiling.per_image_offsets(strategy, keys, (64, 64), 16)
+    for k in (1, 2, 4):
+        plan = tiling.escalation_offsets(strategy, keys, (64, 64), 16, k)
+        assert plan.shape == (7, k, 2)
+        np.testing.assert_array_equal(np.asarray(plan[:, 0]),
+                                      np.asarray(single))
+
+
+def test_escalation_offsets_random_grid_cells_never_collide():
+    """random_grid plans are per-image permutations: at k == gy*gx every
+    cell appears exactly once, grid-aligned."""
+    keys = _keys(9, seed=3)
+    plan = np.asarray(
+        tiling.escalation_offsets("random_grid", keys, (64, 64), 16, 16))
+    assert (plan % 16 == 0).all()
+    cells = plan[..., 0] // 16 * 4 + plan[..., 1] // 16
+    for row in cells:
+        assert sorted(row) == list(range(16)), "colliding/missing cell"
+
+
+def test_escalation_offsets_fixed_is_raster_order():
+    keys = _keys(3)
+    plan = np.asarray(
+        tiling.escalation_offsets("fixed", keys, (48, 48), 16, 4))
+    expect = np.array([[0, 0], [0, 16], [0, 32], [16, 0]]) \
+        [None].repeat(3, axis=0)
+    np.testing.assert_array_equal(plan, expect)
+
+
+def test_escalation_offsets_random_stays_in_bounds():
+    keys = _keys(50, seed=9)
+    plan = np.asarray(
+        tiling.escalation_offsets("random", keys, (40, 40), 16, 3))
+    assert plan.min() >= 0 and plan.max() <= 40 - 16
+
+
+def test_escalation_offsets_rejects_over_budget():
+    keys = _keys(2)
+    with pytest.raises(ValueError, match="at most"):
+        tiling.escalation_offsets("random_grid", keys, (32, 32), 16, 5)
+    with pytest.raises(ValueError, match="at most"):
+        tiling.escalation_offsets("fixed", keys, (32, 32), 16, 5)
+
+
+def test_config_validation():
+    params = init_extractor(jax.random.key(0), n_bits=60, channels=4,
+                            depth=1)
+    with pytest.raises(ValueError, match="sequential"):
+        DetectionPipeline(DetectionConfig(
+            mode="sequential", escalate_tiles=2), params)
+    with pytest.raises(ValueError, match="exceeds"):
+        DetectionPipeline(DetectionConfig(
+            tile=16, img_size=32, escalate_tiles=5), params)
+    with pytest.raises(ValueError, match=">= 1"):
+        DetectionPipeline(DetectionConfig(escalate_tiles=0), params)
+    with pytest.raises(ValueError, match="no effect"):
+        DetectionPipeline(DetectionConfig(escalate_margin=0.5), params)
+
+
+# ---------------------------------------------------------------------------
+# the (b, k, 2) kernel form
+# ---------------------------------------------------------------------------
+
+
+def test_ktile_kernel_matches_oracle_and_single_calls():
+    rng = np.random.default_rng(0)
+    raw = rng.integers(0, 256, (3, 40, 40, 3), dtype=np.uint8)
+    offs = np.array([[0, 0], [8, 4], [16, 16]], np.int32)
+    single = np.asarray(fused_tile_preprocess(
+        raw, offs, resize=36, crop=32, tile=16))
+    plan = np.stack([offs, offs[::-1]], axis=1)          # (3, 2, 2)
+    out = np.asarray(fused_tile_preprocess(
+        raw, plan, resize=36, crop=32, tile=16))
+    ref = np.asarray(fused_tile_preprocess_ref(
+        raw, plan, resize=36, crop=32, tile=16))
+    assert out.shape == (6, 16, 16, 3)
+    np.testing.assert_allclose(out, ref, atol=1e-4)
+    # plan column 0 == the (b, 2) call, bitwise (image-major layout)
+    np.testing.assert_array_equal(out[0::2], single)
+    # the k=1 plan degenerates to the (b, 2) call, bitwise
+    np.testing.assert_array_equal(
+        np.asarray(fused_tile_preprocess(raw, offs[:, None, :],
+                                         resize=36, crop=32, tile=16)),
+        single)
+
+
+# ---------------------------------------------------------------------------
+# policy triggers
+# ---------------------------------------------------------------------------
+
+
+def test_policy_triggers():
+    ok = np.array([True, False, True])
+    logits = np.array([[2.0, -2.0], [2.0, 2.0], [0.1, -0.1]])
+    assert not EscalationPolicy(1).enabled
+    np.testing.assert_array_equal(
+        EscalationPolicy(3).wants_escalation(ok, logits),
+        [False, True, False])
+    np.testing.assert_array_equal(
+        EscalationPolicy(3, margin=0.5).wants_escalation(ok, logits),
+        [False, True, True])
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the margined workload
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def workload():
+    """Watermarked raw images + the corr-only detector that decodes
+    them with a real margin (no trained artifacts needed)."""
+    code = DEFAULT_CODE
+    enc = init_encoder(jax.random.key(1), n_bits=code.codeword_bits,
+                       channels=8, depth=2, tile=TILE)
+    dec = init_extractor(jax.random.key(2), n_bits=code.codeword_bits,
+                         channels=8, depth=2, tile=TILE,
+                         patterns=enc["patterns"])
+    dec["head"]["w"] = dec["head"]["w"] * 0.0   # corr path only
+    rng = np.random.default_rng(0)
+    msg = rng.integers(0, 2, code.message_bits)
+    cw = jnp.asarray(rs_encode(code, msg))
+    imgs = jnp.asarray(np.stack([synth_image(i, IMG) for i in range(B)]),
+                       jnp.float32) / 127.5 - 1.0
+    flat = tiling.grid_partition(imgs, TILE).reshape(-1, TILE, TILE, 3)
+    xw, _ = encoder_forward(
+        enc, flat, jnp.broadcast_to(cw, (flat.shape[0],
+                                         code.codeword_bits)),
+        embed_rms=0.2)
+    g = IMG // TILE
+    xw = xw.reshape(B, g, g, TILE, TILE, 3).transpose(
+        0, 1, 3, 2, 4, 5).reshape(B, IMG, IMG, 3)
+    raw = np.asarray((xw + 1.0) * 127.5, np.float32)
+    return {"dec": dec, "msg": msg, "raw": raw, "code": code}
+
+
+def _cfg(k=1, margin=0.0, **kw):
+    base = dict(tile=TILE, img_size=IMG, resize_src=IMG, mode="qrmark",
+                rs_mode="device", code=DEFAULT_CODE, escalate_tiles=k,
+                escalate_margin=margin)
+    base.update(kw)
+    return DetectionConfig(**base)
+
+
+def _corrupt_round1_tile(raw, pipe, key, fill=None, sigma=None, rng=None):
+    """Damage exactly the tile round 1 will select for each image."""
+    keys = pipe.stages.image_keys(key, raw.shape[0])
+    offs = np.asarray(tiling.tile_first_offsets(
+        pipe.cfg.strategy, keys, img_size=pipe.cfg.img_size,
+        tile=pipe.cfg.tile))
+    out = raw.copy()
+    for i, (y, x) in enumerate(offs):
+        if fill is not None:
+            out[i, y: y + TILE, x: x + TILE] = fill
+        else:
+            out[i, y: y + TILE, x: x + TILE] += rng.normal(
+                0, sigma, (TILE, TILE, 3))
+    return np.clip(out, 0, 255).astype(np.float32)
+
+
+def test_escalation_recovers_noised_round1_tile(workload):
+    """RS-failure-triggered escalation: noise on the selected tile makes
+    round 1 fail; escalating to clean tiles recovers the exact message
+    at sub-linear cost (most images settle in round 2)."""
+    w = workload
+    key = jax.random.key(5)
+    p1 = DetectionPipeline(_cfg(1), w["dec"], ground_truth_bits=w["msg"])
+    p3 = DetectionPipeline(_cfg(3), w["dec"], ground_truth_bits=w["msg"])
+    raw_bad = _corrupt_round1_tile(w["raw"], p1, key, sigma=90,
+                                   rng=np.random.default_rng(1))
+    o1 = p1.detect_batch(raw_bad, key=key)
+    o3 = p3.detect_batch(raw_bad, key=key)
+    assert "tiles_used" not in o1          # k=1 keeps the old schema
+    assert o1["match"].mean() <= 0.2, "corruption did not break round 1"
+    assert o3["match"].mean() >= 0.8, "escalation failed to recover"
+    assert (o3["tiles_used"] > 1).all()
+    assert o3["tiles_used"].max() <= 3
+
+
+def test_margin_trigger_catches_spurious_all_zero_codeword(workload):
+    """A flat tile yields ~zero logits -> all-zero bits, which IS a
+    valid RS codeword (linear code): RS reports ok on garbage.  The
+    thin-margin trigger escalates anyway and recovers the real key."""
+    w = workload
+    key = jax.random.key(5)
+    p1 = DetectionPipeline(_cfg(1), w["dec"], ground_truth_bits=w["msg"])
+    raw_flat = _corrupt_round1_tile(w["raw"], p1, key, fill=128.0)
+    o1 = p1.detect_batch(raw_flat, key=key)
+    assert o1["ok"].all(), "expected the spurious all-zero decode"
+    assert o1["match"].mean() == 0.0
+    pm = DetectionPipeline(_cfg(3, margin=0.6), w["dec"],
+                           ground_truth_bits=w["msg"])
+    om = pm.detect_batch(raw_flat, key=key)
+    assert om["match"].mean() == 1.0
+    assert (om["tiles_used"] >= 2).all(), "margin trigger never fired"
+
+
+def test_clean_images_never_escalate_and_stay_bit_identical(workload):
+    """With round 1 succeeding everywhere, a k>1 pipeline takes the
+    identical code path and produces bitwise identical results to
+    k=1 (the escalate_tiles=1 contract extends to untriggered k>1)."""
+    w = workload
+    key = jax.random.key(5)
+    p1 = DetectionPipeline(_cfg(1), w["dec"], ground_truth_bits=w["msg"])
+    p3 = DetectionPipeline(_cfg(3), w["dec"], ground_truth_bits=w["msg"])
+    o1 = p1.detect_batch(w["raw"], key=key)
+    o3 = p3.detect_batch(w["raw"], key=key)
+    assert o1["match"].all()
+    assert (o3["tiles_used"] == 1).all()
+    for f in _FIELDS:
+        np.testing.assert_array_equal(o1[f], o3[f], err_msg=f)
+
+
+def test_escalation_bit_identical_across_engines(workload):
+    """detect_batch, run_stream (2 lanes), and the sharded run_batch
+    must produce bitwise identical escalated results."""
+    w = workload
+    key = jax.random.key(5)
+    mk = lambda: DetectionPipeline(_cfg(3), w["dec"],
+                                   ground_truth_bits=w["msg"])
+    p = mk()
+    raw_bad = _corrupt_round1_tile(w["raw"], p, key, sigma=90,
+                                   rng=np.random.default_rng(1))
+    ref = p.detect_batch(raw_bad, key=key)
+    shard = mk().run_batch(raw_bad, key=key)
+    # run_stream derives batch 0's key from the seed: compare against a
+    # fresh detect_batch doing the same
+    stream = mk().run_stream([raw_bad], lanes=2)["results"][0]
+    seq_ref = mk().detect_batch(raw_bad)
+    fields = _FIELDS + ("tiles_used",)
+    for f in fields:
+        np.testing.assert_array_equal(ref[f], shard[f],
+                                      err_msg=f"run_batch/{f}")
+        np.testing.assert_array_equal(stream[f], seq_ref[f],
+                                      err_msg=f"run_stream/{f}")
+
+
+def test_always_k_decode_all_matches_per_round_tiles(workload):
+    """decode_all_keyed (the (b, k, 2) kernel path) must equal the
+    per-round escalation decodes stacked — same plan, same tiles,
+    same soft bits."""
+    w = workload
+    p = DetectionPipeline(_cfg(3), w["dec"])
+    reg = p.stages
+    key = jax.random.key(7)
+    keys = reg.image_keys(key, B)
+    all_logits = np.asarray(reg.decode_all_keyed(w["raw"], keys))
+    assert all_logits.shape == (B, 3, w["code"].codeword_bits)
+    round0 = np.asarray(reg.decode_keyed(
+        reg.ingest_keyed(w["raw"], keys), keys))
+    np.testing.assert_array_equal(all_logits[:, 0], round0)
+    for r in (1, 2):
+        np.testing.assert_array_equal(
+            all_logits[:, r],
+            np.asarray(reg.escalate_round(w["raw"], keys, r)),
+            err_msg=f"round {r}")
+
+
+def test_padded_rows_never_escalate(workload):
+    """Feeders that pad batches pass true_b: pad rows (repeats of the
+    last real image) must not consume escalation rounds, and the real
+    rows' results must equal the unpadded run bitwise."""
+    w = workload
+    key = jax.random.key(5)
+    p = DetectionPipeline(_cfg(3), w["dec"], ground_truth_bits=w["msg"])
+    raw_bad = _corrupt_round1_tile(w["raw"], p, key, sigma=90,
+                                   rng=np.random.default_rng(1))
+    padded = np.concatenate([raw_bad, raw_bad[-1:].repeat(2, axis=0)])
+    ref = p.detect_batch(raw_bad, key=key)
+    out = p.detect_batch(padded, key=key, true_b=B)
+    assert (out["tiles_used"][B:] == 1).all(), "pad rows escalated"
+    for f in _FIELDS + ("tiles_used",):
+        np.testing.assert_array_equal(ref[f], out[f][:B], err_msg=f)
+    # run_stream accepts (raw, true_b) items with the same guarantee
+    stream = p.run_stream([(padded, B)], lanes=1)["results"][0]
+    assert (stream["tiles_used"][B:] == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# online server escalation
+# ---------------------------------------------------------------------------
+
+
+def test_server_escalation_bit_identical_and_metered(workload):
+    """The server's re-submitted escalation micro-batches must produce
+    results bitwise equal to offline detect_batch at the same config,
+    and export escalation metrics."""
+    from repro.serving import BatcherConfig, DetectionServer
+    w = workload
+    p3 = DetectionPipeline(_cfg(3), w["dec"])
+    # requests of 2 images each; each request's round-1 tiles (selected
+    # under ITS key) are noised so the online path must escalate
+    keys = [jax.random.key(100 + i) for i in range(3)]
+    reqs = [_corrupt_round1_tile(w["raw"][2 * i: 2 * i + 2], p3,
+                                 keys[i], sigma=90,
+                                 rng=np.random.default_rng(1 + i))
+            for i in range(3)]
+    srv = DetectionServer(
+        _cfg(3), w["dec"],
+        batcher=BatcherConfig(max_batch=4, max_wait_ms=2.0)).start()
+    try:
+        handles = [srv.submit(r, key=k) for r, k in zip(reqs, keys)]
+        results = [h.result(300) for h in handles]
+        stats = srv.stats()
+    finally:
+        srv.close()
+    any_escalated = False
+    for i, res in enumerate(results):
+        ref = p3.detect_batch(reqs[i], key=keys[i])
+        any_escalated |= bool((ref["tiles_used"] > 1).any())
+        for f in _FIELDS + ("tiles_used",):
+            np.testing.assert_array_equal(ref[f], res[f],
+                                          err_msg=f"req {i}/{f}")
+    assert any_escalated, "workload never escalated — test is vacuous"
+    assert stats["counters"]["images_escalated"] > 0
+    assert stats["escalation_batches"] > 0
+    assert stats["escalation_rate"] > 0
+    assert stats["tiles_per_image"]["n"] == 6
+    assert stats["tiles_per_image"]["mean"] > 1.0
+
+
+def test_server_without_escalation_keeps_old_schema(workload):
+    """escalate_tiles=1 online results carry the pre-escalation result
+    schema (no tiles_used) — nothing changed for existing clients."""
+    from repro.serving import BatcherConfig, DetectionServer
+    w = workload
+    srv = DetectionServer(
+        _cfg(1), w["dec"],
+        batcher=BatcherConfig(max_batch=4, max_wait_ms=2.0)).start()
+    try:
+        res = srv.submit(w["raw"][:2], key=jax.random.key(0)).result(120)
+    finally:
+        srv.close()
+    assert "tiles_used" not in res
+    assert srv.registry.policy.enabled is False

@@ -1,0 +1,92 @@
+"""Attack-registry tests (core/transforms.py): invariants every ATTACKS
+entry must hold, JPEG quality ordering, and registry completeness
+against the module's ``attack_*`` functions.
+
+The attacks run on normalized float images (the detection pipeline's
+tile space); each must preserve shape/dtype, stay finite, and stay
+within a sane range of the clipped input domain so a benchmark sweep
+(table3, fig12) can apply any registry entry blindly.
+"""
+import inspect
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import transforms
+from repro.core.transforms import ATTACKS, STABLE_SIG_ATTACKS
+
+
+def _batch(seed=0, b=2, hw=24):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0.0, 1.0, (b, hw, hw, 3)),
+                       jnp.float32).clip(-2.0, 2.0)
+
+
+@pytest.mark.parametrize("name", sorted(ATTACKS))
+def test_attack_invariants(name):
+    """Every registry entry: shape-, dtype-, and sanity-preserving."""
+    x = _batch()
+    y = ATTACKS[name](x)
+    assert y.shape == x.shape, f"{name} changed the image shape"
+    assert y.dtype == jnp.float32, f"{name} changed the dtype"
+    y = np.asarray(y)
+    assert np.isfinite(y).all(), f"{name} produced non-finite values"
+    # inputs live in the clipped normalized domain; attacks may expand
+    # it (brightness doubles, jpeg rings) but must stay bounded
+    assert np.abs(y).max() <= 6.0, f"{name} exploded the value range"
+
+
+def test_identity_attack_is_identity():
+    x = _batch(1)
+    np.testing.assert_array_equal(np.asarray(ATTACKS["none"](x)),
+                                  np.asarray(x))
+
+
+def test_jpeg_quality_ordering():
+    """Higher JPEG quality must distort less: q=90 closer to the input
+    than q=50, which is closer than q=10."""
+    x = _batch(2, hw=32)
+    err = {q: float(jnp.abs(transforms.attack_jpeg(x, q) - x).mean())
+           for q in (10, 50, 90)}
+    assert err[90] < err[50] < err[10], err
+    assert err[90] < 0.5
+
+
+def test_attacks_are_deterministic():
+    x = _batch(3)
+    for name, fn in ATTACKS.items():
+        np.testing.assert_array_equal(np.asarray(fn(x)),
+                                      np.asarray(fn(x)),
+                                      err_msg=name)
+
+
+def test_registry_covers_every_attack_function():
+    """Every public ``attack_*`` function must be reachable from the
+    ATTACKS registry (benchmarks sweep the registry, so an unregistered
+    attack silently drops out of every evaluation)."""
+    fns = [n[len("attack_"):] for n, f in
+           inspect.getmembers(transforms, inspect.isfunction)
+           if n.startswith("attack_")]
+    assert fns, "no attack_* functions found"
+    for stem in fns:
+        hits = [k for k in ATTACKS
+                if k == stem or k.startswith(stem + "_")]
+        assert hits, f"attack_{stem} has no ATTACKS registry entry"
+
+
+def test_registry_entries_map_to_functions():
+    """Inverse direction: every registry key (except the identity) is
+    named after an ``attack_*`` function."""
+    for key in ATTACKS:
+        if key == "none":
+            continue
+        stem = key.split("_")[0]
+        candidates = [n for n in dir(transforms)
+                      if n.startswith("attack_" + stem)]
+        assert candidates, f"registry key {key!r} names no attack fn"
+
+
+def test_stable_sig_set_is_subset_of_registry():
+    missing = set(STABLE_SIG_ATTACKS) - set(ATTACKS)
+    assert not missing, f"STABLE_SIG_ATTACKS not in registry: {missing}"

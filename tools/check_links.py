@@ -1,0 +1,54 @@
+#!/usr/bin/env python3
+"""Verify that every relative markdown link in README.md and docs/*.md
+resolves to a real file (CI docs job).
+
+Checks ``[text](target)`` links whose target has no URL scheme; targets
+are resolved relative to the file containing the link, ``#anchors`` are
+stripped (anchor existence is not validated — only that the file
+exists).  Exits non-zero listing every broken link.
+
+  python tools/check_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SCHEME_RE = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")
+
+
+def check_file(md: Path, root: Path) -> list:
+    broken = []
+    for target in LINK_RE.findall(md.read_text()):
+        if SCHEME_RE.match(target) or target.startswith("#"):
+            continue                        # external URL / in-page anchor
+        path = target.split("#", 1)[0]
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            broken.append((md.relative_to(root), target))
+    return broken
+
+
+def main() -> int:
+    root = Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    files = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    broken = []
+    checked = 0
+    for md in files:
+        if not md.exists():
+            broken.append((md.relative_to(root), "<file missing>"))
+            continue
+        checked += 1
+        broken += check_file(md, root)
+    if broken:
+        for src, target in broken:
+            print(f"BROKEN: {src}: {target}")
+        return 1
+    print(f"all relative links resolve across {checked} markdown files")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
