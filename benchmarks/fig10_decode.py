@@ -1,35 +1,36 @@
-"""Fig. 10 (repo-native): unfused vs fused decode, fp32 vs bf16.
+"""Fig. 10 (repo-native): decode across precisions and kernel schedules.
 
 After the tile-first ingest cut (fig9) the decode stage — the 7-block
 extractor conv stack + GAP/head + correlation bank — is the dominant
 hot-path cost.  ``kernels.fused_extractor`` runs the whole forward in
-one Pallas launch per tile batch on pre-packed weights, with a bf16 MXU
-compute path.  This benchmark quantifies the three variants:
+one Pallas launch per tile batch on pre-packed weights; this benchmark
+sweeps the full precision ladder x kernel schedule matrix:
 
-* ``unfused``    — ``extractor_forward`` as a plain jitted XLA graph
+* ``unfused``       — ``extractor_forward`` as a plain jitted XLA graph
   (im2col matmuls materialised between every block);
-* ``fused_fp32`` — the kernel on an fp32 pack (bit-identical to
-  unfused by construction — asserted here);
-* ``fused_bf16`` — the kernel on a bf16 pack: bf16 matmul inputs, fp32
-  accumulation and epilogue.
+* precision rungs (packed-weight dtype): ``fp32`` (bit-identical to
+  unfused by construction — asserted here on BOTH schedules), ``bf16``
+  (bf16 MXU inputs, fp32 accumulation), ``int8`` (per-channel weight
+  scales baked in at pack time, per-row activation quantization, int32
+  accumulation — the TPU-oriented bottom rung; on this CPU host XLA
+  has no fast int8 GEMM, so its wall time is a correctness datapoint,
+  not a speedup);
+* schedules: ``flat`` (grid=(b,), one image per step) and ``tuned``
+  (the blocked kernel at the autotune winner for this
+  backend/dtype/tile key — padded-activation scratch, flat-norm
+  epilogue, channel-tiled accumulator; ``kernels/autotune.py``, cache
+  under ``experiments/autotune/``).
 
-Numbers reported per (tile, batch) config:
-
-* ``flops`` / ``bytes`` — XLA ``cost_analysis()`` of each jitted graph.
-  NB the fused graphs lower to a grid *loop*, whose body cost_analysis
-  counts once — i.e. fused flops are per grid step (= per image), while
-  unfused flops cover the whole batch; ``flops_per_image`` normalises
-  both.  The arithmetic is intentionally identical per image — fusion
-  wins on memory traffic and launches, bf16 on MXU rate;
-* ``mxu_effective_flops_per_image`` — per-image flops scaled by the MXU
-  dtype throughput (bf16 runs the 128x128 systolic array at 2x fp32),
-  the TPU-cost view of the precision policy;
-* ``wall_s`` — measured per call on this host (CPU interpret mode);
-* ``bit_agreement`` (bf16 vs fp32 logit signs) and
-  ``decision_agreement`` (identical RS ``message_bits``/``ok``) on a
-  margin-bearing workload: codewords embedded through the tied
-  spread-spectrum pattern bank, the deployment distribution where bf16
-  error is far from the bit threshold.
+Numbers reported per (tile, batch) config: ``wall_s`` per variant,
+cost_analysis flops/bytes for the flat variants (NB fused graphs lower
+to a grid loop whose body cost_analysis counts once — fused flops are
+per grid step; ``flops_per_image`` normalises), wall speedups vs both
+the unfused graph and the flat fp32 kernel, and — per reduced-precision
+rung — ``bit_agreement`` (logit signs vs fp32) and
+``decision_agreement`` (identical RS ``message_bits``/``ok``) on a
+margin-bearing workload: codewords embedded through the tied
+spread-spectrum pattern bank, the deployment distribution where
+quantization error is far from the bit threshold.
 
 Writes ``experiments/bench/BENCH_decode.json`` (perf-trajectory series).
 """
@@ -44,17 +45,23 @@ from repro.core.extractor import (encoder_forward, extractor_forward,
                                   init_encoder, init_extractor,
                                   pack_params)
 from repro.core.rs.codec import DEFAULT_CODE, rs_encode
+from repro.kernels import autotune as autotune_lib
 from repro.kernels import ops as kops
 
 # (tile, batch); extractor at paper scale: 64 channels x 7 blocks
 CONFIGS = ((64, 8), (32, 16))
 CHANNELS, DEPTH = 64, 7
+DTYPES = ("fp32", "bf16", "int8")
+
+AUTOTUNE_CACHE = common.REPO / "experiments" / "autotune" / \
+    "decode_schedules.json"
 
 
 def _workload(tile: int, batch: int):
     """Watermarked tiles + the extractor that decodes them: encoder and
     extractor share the spread-spectrum pattern bank, so bit logits
-    carry a real margin (the deployment regime for the bf16 policy)."""
+    carry a real margin (the deployment regime for the reduced-precision
+    rungs)."""
     from repro.data.pipeline import synth_image
     code = DEFAULT_CODE
     enc = init_encoder(jax.random.key(1), n_bits=code.codeword_bits,
@@ -77,74 +84,109 @@ def _workload(tile: int, batch: int):
     return params, tiles, code
 
 
+def _tuned_schedule(packed, tile, batch, dtype, quick):
+    """The autotune winner for this key (tiny cached sweep on a miss)."""
+    return autotune_lib.autotune(
+        packed, tile=tile, batch=batch, dtype=dtype,
+        cache_path=AUTOTUNE_CACHE, iters=2 if quick else 3,
+        quick=True, log=lambda *a, **k: None)
+
+
 def main(quick: bool = False):
     configs = CONFIGS[:1] if quick else CONFIGS
-    iters = 2 if quick else 4
+    iters = 2 if quick else 6
     rows = []
     for tile, batch in configs:
         if quick:
             batch = min(batch, 4)
         params, tiles, code = _workload(tile, batch)
-        pk32 = pack_params(params, "fp32")
-        pk16 = pack_params(params, "bf16")
         unfused = jax.jit(lambda t: extractor_forward(params, t))
-        fused32 = jax.jit(lambda t: kops.fused_extractor(t, pk32))
-        fused16 = jax.jit(lambda t: kops.fused_extractor(t, pk16))
-
         u_fl, u_by = common.cost_analysis(unfused, tiles)
-        f_fl, f_by = common.cost_analysis(fused32, tiles)
-        h_fl, h_by = common.cost_analysis(fused16, tiles)
         u_wall = common.timeit(unfused, tiles, iters=iters)
-        f_wall = common.timeit(fused32, tiles, iters=iters)
-        h_wall = common.timeit(fused16, tiles, iters=iters)
-
-        l32 = np.asarray(fused32(tiles))
-        l16 = np.asarray(fused16(tiles))
         lu = np.asarray(unfused(tiles))
-        assert np.array_equal(l32, lu), \
-            "fused fp32 decode must be bit-identical to extractor_forward"
-        bit_agree = float(((l16 > 0) == (l32 > 0)).mean())
         dev_rs = jax.jit(lambda b: kops.rs_decode(b, code=code))
-        r32 = dev_rs((jnp.asarray(l32) > 0).astype(jnp.int32))
-        r16 = dev_rs((jnp.asarray(l16) > 0).astype(jnp.int32))
-        decision_agree = float(np.mean(
-            np.all(np.asarray(r32["message_bits"]) ==
-                   np.asarray(r16["message_bits"]), axis=1) &
-            (np.asarray(r32["ok"]) == np.asarray(r16["ok"]))))
 
-        # fused graphs lower to a grid loop: cost_analysis counts the
-        # body (one image) once; normalise both views per image
+        def rs_of(logits):
+            r = dev_rs((jnp.asarray(logits) > 0).astype(jnp.int32))
+            return np.asarray(r["message_bits"]), np.asarray(r["ok"])
+
+        m32 = ok32 = l32 = None
         row = {
             "tile": tile, "batch": batch,
             "channels": CHANNELS, "depth": DEPTH,
             "unfused": {"flops": u_fl, "bytes": u_by, "wall_s": u_wall,
                         "flops_per_image": u_fl / batch},
-            "fused_fp32": {"flops": f_fl, "bytes": f_by,
-                           "wall_s": f_wall, "flops_per_image": f_fl,
-                           "mxu_effective_flops_per_image": f_fl},
-            "fused_bf16": {"flops": h_fl, "bytes": h_by,
-                           "wall_s": h_wall, "flops_per_image": h_fl,
-                           "mxu_effective_flops_per_image": h_fl / 2.0},
-            "flop_reduction_cost_analysis":
-                round(u_fl / f_fl, 2) if f_fl else None,
-            "mxu_effective_flop_reduction_bf16":
-                round((u_fl / batch) / (h_fl / 2.0), 2) if h_fl else None,
-            "wall_speedup_fp32": round(u_wall / f_wall, 2) if f_wall
-            else None,
-            "wall_speedup_bf16": round(u_wall / h_wall, 2) if h_wall
-            else None,
-            "bit_agreement_bf16": round(bit_agree, 5),
-            "decision_agreement_bf16": decision_agree,
-            "fp32_bit_identical": True,
         }
+        for dtype in DTYPES:
+            pk = pack_params(params, dtype)
+            sched = _tuned_schedule(pk, tile, batch, dtype, quick)
+            flat = jax.jit(lambda t, _pk=pk: kops.fused_extractor(
+                t, _pk))
+            sched_str = "flat" if sched is None else sched.to_string()
+            tuned = jax.jit(lambda t, _pk=pk, _s=sched:
+                            kops.fused_extractor(t, _pk, schedule=_s))
+            f_fl, f_by = common.cost_analysis(flat, tiles)
+            f_wall = common.timeit(flat, tiles, iters=iters)
+            t_wall = common.timeit(tuned, tiles, iters=iters)
+            lf = np.asarray(flat(tiles))
+            lt = np.asarray(tuned(tiles))
+            if dtype == "fp32":
+                # THE fp32 bit-identity contract, on both schedules
+                assert np.array_equal(lf, lu), \
+                    "fused fp32 decode (flat schedule) must be " \
+                    "bit-identical to extractor_forward"
+                assert np.array_equal(lt, lu), \
+                    "fused fp32 decode (tuned blocked schedule) must " \
+                    "be bit-identical to extractor_forward"
+                l32 = lf
+                m32, ok32 = rs_of(l32)
+            row[f"fused_{dtype}"] = {
+                "dtype": dtype, "schedule": "flat",
+                "flops": f_fl, "bytes": f_by, "wall_s": f_wall,
+                "flops_per_image": f_fl,
+            }
+            row[f"fused_{dtype}_tuned"] = {
+                "dtype": dtype, "schedule": sched_str,
+                "wall_s": t_wall,
+                "wall_speedup_vs_flat": round(f_wall / t_wall, 3),
+            }
+            if dtype != "fp32":
+                md, okd = rs_of(lf)
+                row[f"bit_agreement_{dtype}"] = round(
+                    float(((lf > 0) == (l32 > 0)).mean()), 5)
+                row[f"decision_agreement_{dtype}"] = float(np.mean(
+                    np.all(md == m32, axis=1) & (okd == ok32)))
+                # flat vs tuned must agree bitwise within a dtype too
+                # (same quantization, same accumulation order)
+                row[f"{dtype}_schedule_bit_identical"] = bool(
+                    np.array_equal(lf, lt))
+
+        f32, t32 = row["fused_fp32"], row["fused_fp32_tuned"]
+        row.update({
+            "flop_reduction_cost_analysis":
+                round(u_fl / f32["flops"], 2) if f32["flops"] else None,
+            "mxu_effective_flop_reduction_bf16":
+                round((u_fl / batch) / (row["fused_bf16"]["flops"] / 2.0),
+                      2) if row["fused_bf16"]["flops"] else None,
+            "wall_speedup_fp32": round(u_wall / f32["wall_s"], 2),
+            "wall_speedup_bf16": round(
+                u_wall / row["fused_bf16"]["wall_s"], 2),
+            # the headline schedule number: tuned blocked vs flat, fp32
+            "wall_speedup_tuned_fp32": round(
+                f32["wall_s"] / t32["wall_s"], 3),
+            "tuned_schedule_fp32": t32["schedule"],
+            "fp32_bit_identical": True,   # asserted above, both schedules
+        })
         rows.append(row)
         common.emit(
-            f"fig10/tile{tile}_b{batch}", h_wall,
+            f"fig10/tile{tile}_b{batch}", t32["wall_s"],
             f"wall_speedup_fp32={row['wall_speedup_fp32']}x;"
+            f"wall_speedup_tuned_fp32={row['wall_speedup_tuned_fp32']}x"
+            f"({t32['schedule']});"
             f"wall_speedup_bf16={row['wall_speedup_bf16']}x;"
-            f"flop_reduction={row['flop_reduction_cost_analysis']}x;"
-            f"bit_agree={bit_agree:.4f};"
-            f"decision_agree={decision_agree:.3f}")
+            f"bit_agree_bf16={row['bit_agreement_bf16']};"
+            f"bit_agree_int8={row['bit_agreement_int8']};"
+            f"decision_agree_int8={row['decision_agreement_int8']}")
     common.save_json("BENCH_decode", rows)
     return rows
 

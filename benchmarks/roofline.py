@@ -1,64 +1,221 @@
-"""Roofline table: reads the dry-run JSON records (experiments/dryrun/)
-and prints per-(arch x shape x mesh) compute/memory/collective terms,
-dominant bottleneck, MODEL_FLOPS/HLO_FLOPS ratio — the §Roofline
-deliverable."""
+"""Roofline table: per-stage detection-pipeline achieved vs roofline
+FLOP rates (the §Roofline deliverable, re-anchored).
+
+Earlier revisions of this table read the LLM dry-run records left over
+from the seed scaffold (``experiments/dryrun``) — stale numbers about a
+model this repo no longer runs.  This module measures the *detection
+pipeline itself*, stage by stage, live on this host:
+
+* ``peak`` — the machine's achievable dense-GEMM rate, measured with a
+  large fp32 matmul (the roofline everything else is a fraction of; on
+  CPU this is what Eigen reaches, on TPU the MXU rate);
+* ``ingest`` — the tile-first fused preprocess kernel.  Model FLOPs are
+  analytic: the two per-channel interpolation matmuls the kernel
+  actually runs, (l, H) @ (H, W) @ (W, l) per image (sliced
+  interpolation matrices; see ``kernels/fused_tile_preprocess.py``);
+* ``decode`` — the fused extractor kernel (flat schedule, plus the
+  tuned blocked schedule when the autotune cache has a winner).  Model
+  FLOPs are analytic: the nine-tap conv matmuls + to_bits + head +
+  correlation bank;
+* ``rs`` — the batched Berlekamp-Welch kernel.  GF(2^m) arithmetic is
+  table lookups and XORs, not float math, so there is no analytic FLOP
+  model; its row uses the XLA ``cost_analysis`` count (basis "hlo") and
+  its roofline fraction is reported on that basis only.
+
+Each row reports achieved GFLOP/s (model FLOPs / measured wall) and
+``roofline_fraction`` = achieved / peak.  When
+``experiments/bench/BENCH_decode.json`` exists (fig10 output), the
+decode rows are cross-referenced against its wall numbers so the two
+tables stay mutually consistent; when absent, a hint is printed.
+
+Writes ``experiments/bench/BENCH_roofline.json``.
+"""
 from __future__ import annotations
 
 import json
-from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 from benchmarks import common
 
-
-def load_records(mesh: str = "single", tag: str = "baseline"):
-    recs = []
-    for p in sorted(common.DRYRUN_DIR.glob(f"*__{mesh}__{tag}.json")):
-        recs.append(json.loads(p.read_text()))
-    return recs
-
-
-def fmt_row(r):
-    if r.get("status") == "skipped":
-        return (f"{r['arch']:26s} {r['shape']:12s} SKIP: "
-                f"{r.get('reason', '')[:48]}")
-    if r.get("status") != "ok":
-        return (f"{r['arch']:26s} {r['shape']:12s} FAILED: "
-                f"{r.get('error', '')[:60]}")
-    d = r["derived"]
-    return (f"{r['arch']:26s} {r['shape']:12s} "
-            f"tc={d['t_compute_s']:9.4f}s tm={d['t_memory_s']:9.4f}s "
-            f"tx={d['t_collective_s']:9.4f}s dom={d['dominant']:10s} "
-            f"useful={d['useful_flops_ratio']:6.3f} "
-            f"roofline_frac={d['roofline_fraction']:5.3f}")
+# representative detection config: fig10's primary decode point riding
+# on a serve.py-shaped ingest (raw = img + 32)
+TILE, BATCH = 64, 8
+IMG, RAW = 128, 160
+CHANNELS, DEPTH = 64, 7
 
 
-def main(quick: bool = False, mesh: str = "single", tag: str = "baseline"):
-    recs = load_records(mesh, tag)
-    if not recs:
-        print(f"roofline: no dry-run records for mesh={mesh} tag={tag}; "
-              "run repro.launch.dryrun first", flush=True)
-        return []
-    print(f"--- roofline ({mesh}-pod mesh, tag={tag}) ---", flush=True)
-    rows = []
-    for r in recs:
-        print(fmt_row(r), flush=True)
-        if r.get("status") == "ok":
-            d = r["derived"]
-            rows.append({"arch": r["arch"], "shape": r["shape"],
-                         "mesh": r["mesh"], **{k: d[k] for k in (
-                             "t_compute_s", "t_memory_s", "t_collective_s",
-                             "dominant", "useful_flops_ratio",
-                             "roofline_fraction", "model_flops")}})
-            common.emit(
-                f"roofline/{r['arch']}/{r['shape']}/{mesh}",
-                d["roofline_bound_s"],
-                f"dom={d['dominant']};frac={d['roofline_fraction']:.3f};"
-                f"useful={d['useful_flops_ratio']:.3f}")
-    common.save_json(f"roofline_{mesh}_{tag}", rows)
+def measure_peak_gemm(n: int = 768, iters: int = 5) -> dict:
+    """Measured dense fp32 GEMM rate — the roofline ceiling."""
+    a = jnp.asarray(np.random.default_rng(0).normal(
+        size=(n, n)).astype(np.float32))
+    f = jax.jit(lambda x: x @ x)
+    wall = common.timeit(f, a, iters=iters, warmup=2)
+    flops = 2.0 * n ** 3
+    return {"stage": "peak", "wall_s": wall, "model_flops": flops,
+            "achieved_gflops": flops / wall / 1e9, "basis": "model",
+            "note": f"dense fp32 {n}^3 GEMM"}
+
+
+def ingest_model_flops(tile: int, raw: int, batch: int) -> float:
+    """Per-batch analytic FLOPs of tile-first ingest: two sliced
+    interpolation matmuls per channel per image —
+    (l, H) @ (H, W) then (l, W) @ (W, l)."""
+    per_image = 3 * (2.0 * tile * raw * raw + 2.0 * tile * tile * raw)
+    return batch * per_image
+
+
+def decode_model_flops(tile: int, batch: int, channels: int, depth: int,
+                       n_bits: int) -> float:
+    """Per-batch analytic FLOPs of the fused decode: nine-tap conv
+    matmuls (layer 0 reads 3 input channels), to_bits, GAP-head and the
+    correlation bank."""
+    l2 = float(tile * tile)
+    conv = 2.0 * 9 * l2 * (3 * channels
+                           + (depth - 1) * channels * channels
+                           + channels * n_bits)
+    head = 2.0 * n_bits * n_bits
+    corr = 2.0 * l2 * 3 * n_bits + 9 * l2 * 3  # contraction + box blur
+    return batch * (conv + head + corr)
+
+
+def _stage_row(name, wall, model_flops, peak_gflops, *, hlo_flops=None,
+               basis="model", note=""):
+    flops = model_flops if basis == "model" else hlo_flops
+    achieved = flops / wall / 1e9 if wall else 0.0
+    return {
+        "stage": name, "wall_s": wall,
+        "model_flops": model_flops, "hlo_flops": hlo_flops,
+        "achieved_gflops": achieved,
+        "roofline_fraction": achieved / peak_gflops if peak_gflops
+        else 0.0,
+        "basis": basis, "note": note,
+    }
+
+
+def main(quick: bool = False):
+    from repro.core.extractor import init_extractor, pack_params
+    from repro.core.rs.codec import DEFAULT_CODE
+    from repro.core import tiling
+    from repro.data.pipeline import synth_image
+    from repro.kernels import autotune as autotune_lib
+    from repro.kernels import ops as kops
+
+    tile, batch = (TILE, 4) if quick else (TILE, BATCH)
+    iters = 2 if quick else 4
+    code = DEFAULT_CODE
+    n_bits = code.codeword_bits
+
+    print(f"--- roofline: detection pipeline stages "
+          f"(tile={tile} batch={batch} backend="
+          f"{jax.default_backend()}) ---", flush=True)
+
+    peak = measure_peak_gemm(512 if quick else 768, iters=iters)
+    peak_gflops = peak["achieved_gflops"]
+    rows = [peak]
+    print(f"peak GEMM: {peak_gflops:8.2f} GFLOP/s ({peak['note']})",
+          flush=True)
+
+    # -- ingest: tile-first fused preprocess ---------------------------
+    raw = np.stack([synth_image(i, RAW) for i in range(batch)])
+    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.key(0), i)
+                    )(jnp.arange(batch))
+    offs = tiling.tile_first_offsets("random", keys, img_size=IMG,
+                                     tile=tile)
+    ingest = jax.jit(lambda r, o: kops.fused_tile_preprocess(
+        r, o, resize=IMG + IMG // 8, crop=IMG, tile=tile))
+    wall = common.timeit(ingest, raw, offs, iters=iters)
+    hlo_fl, _ = common.cost_analysis(ingest, raw, offs)
+    rows.append(_stage_row(
+        "ingest", wall, ingest_model_flops(tile, RAW, batch),
+        peak_gflops, hlo_flops=hlo_fl,
+        note="tile-first fused preprocess (sliced interp matmuls)"))
+
+    # -- decode: fused extractor, flat + tuned schedule ----------------
+    params = init_extractor(jax.random.key(2), n_bits=n_bits,
+                            channels=CHANNELS, depth=DEPTH, tile=tile)
+    pk32 = pack_params(params, "fp32")
+    tiles = jnp.asarray(np.random.default_rng(0).uniform(
+        -1, 1, (batch, tile, tile, 3)).astype(np.float32))
+    dec_model = decode_model_flops(tile, batch, CHANNELS, DEPTH, n_bits)
+    flat = jax.jit(lambda t: kops.fused_extractor(t, pk32))
+    wall = common.timeit(flat, tiles, iters=iters)
+    # the fused graph lowers to a grid loop — cost_analysis counts the
+    # body (one image) once; scale to the batch for the hlo basis
+    hlo_fl, _ = common.cost_analysis(flat, tiles)
+    rows.append(_stage_row(
+        "decode_flat", wall, dec_model, peak_gflops,
+        hlo_flops=hlo_fl * batch,
+        note="fused extractor, flat schedule, fp32"))
+
+    cache_path = common.REPO / "experiments" / "autotune" / \
+        "decode_schedules.json"
+    key = autotune_lib.schedule_key(
+        backend=jax.default_backend(), dtype="fp32", tile=tile,
+        channels=CHANNELS, depth=DEPTH, n_bits=n_bits)
+    sched = autotune_lib.cache_lookup(
+        autotune_lib.load_cache(cache_path), key)
+    if sched is not None:
+        tuned = jax.jit(lambda t: kops.fused_extractor(
+            t, pk32, schedule=sched))
+        wall_t = common.timeit(tuned, tiles, iters=iters)
+        rows.append(_stage_row(
+            "decode_tuned", wall_t, dec_model, peak_gflops,
+            note=f"fused extractor, tuned schedule "
+                 f"{sched.to_string()}, fp32"))
+    else:
+        print(f"roofline: no tuned schedule cached for {key} "
+              f"(run `python -m repro.kernels.autotune` or fig10 "
+              f"first); decode_tuned row skipped", flush=True)
+
+    # -- rs: batched Berlekamp-Welch (hlo basis) -----------------------
+    bits = jnp.asarray(np.random.default_rng(1).integers(
+        0, 2, (batch, n_bits)).astype(np.int32))
+    rs = jax.jit(lambda b: kops.rs_decode(b, code=code))
+    wall = common.timeit(rs, bits, iters=iters)
+    hlo_fl, _ = common.cost_analysis(rs, bits)
+    rows.append(_stage_row(
+        "rs", wall, None, peak_gflops, hlo_flops=hlo_fl, basis="hlo",
+        note="GF(16) Berlekamp-Welch: table/XOR work, no float model; "
+             "fraction on the XLA cost_analysis basis"))
+
+    # -- cross-reference fig10's decode walls --------------------------
+    bench_decode = common.OUT_DIR / "BENCH_decode.json"
+    if bench_decode.exists():
+        try:
+            recs = json.loads(bench_decode.read_text())
+            rec = next((r for r in recs if r.get("tile") == tile), None)
+            if rec is not None:
+                w = rec["fused_fp32"]["wall_s"]
+                rows.append(_stage_row(
+                    "decode_flat_fig10", w,
+                    decode_model_flops(tile, rec["batch"], CHANNELS,
+                                       DEPTH, n_bits),
+                    peak_gflops,
+                    note="fig10's measured flat-fp32 wall, for "
+                         "cross-checking the live row"))
+        except (json.JSONDecodeError, KeyError) as e:
+            print(f"roofline: could not cross-reference "
+                  f"{bench_decode}: {e}", flush=True)
+    else:
+        print("roofline: experiments/bench/BENCH_decode.json not found "
+              "— run `python -m benchmarks.run --only fig10` (or the "
+              "full benchmarks.run) to generate the decode records "
+              "this table cross-references", flush=True)
+
+    for r in rows[1:]:
+        frac = r["roofline_fraction"]
+        print(f"{r['stage']:18s} wall={r['wall_s'] * 1e3:9.2f}ms "
+              f"achieved={r['achieved_gflops']:8.3f} GFLOP/s "
+              f"frac={frac:6.4f} ({r['basis']})", flush=True)
+        common.emit(f"roofline/{r['stage']}", r["wall_s"],
+                    f"achieved_gflops={r['achieved_gflops']:.3f};"
+                    f"roofline_frac={frac:.4f};basis={r['basis']}")
+    common.save_json("BENCH_roofline", rows)
     return rows
 
 
 if __name__ == "__main__":
-    import sys
-    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
-    main(mesh=mesh)
+    main()

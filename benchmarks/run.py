@@ -25,14 +25,15 @@ MODULES = [
     ("fig7_latency", "Fig 7: latency vs batch"),
     ("fig8_breakdown", "Fig 8: optimization breakdown"),
     ("fig9_tile_ingest", "Fig 9: staged vs tile-first ingest"),
-    ("fig10_decode", "Fig 10: unfused vs fused decode, fp32 vs bf16"),
+    ("fig10_decode", "Fig 10: unfused vs fused decode, "
+                     "fp32/bf16/int8 x flat/tuned schedules"),
     ("fig11_online_serving",
      "Fig 11: online serving — offered load vs latency percentiles"),
     ("fig12_escalation",
      "Fig 12: adaptive multi-tile escalation under attacks"),
     ("alloc_adaptivity", "§3: stream-allocation adaptivity"),
     ("kernel_fusion", "App B.1: preprocess kernel fusion"),
-    ("roofline", "§Roofline: dry-run derived terms"),
+    ("roofline", "§Roofline: per-stage achieved vs roofline FLOPs"),
 ]
 
 

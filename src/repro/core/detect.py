@@ -33,7 +33,14 @@ packed once per pipeline build (``extractor.pack_params``).
 to the unfused ``extractor_forward`` graph (they share one body);
 "bf16" computes the matmuls at bf16 with fp32 accumulation — logit
 perturbations ~1e-2, occasionally flipping a zero-margin bit, which RS
-absorbs (one bit = one GF(16) symbol, within the t=1 radius).
+absorbs (one bit = one GF(16) symbol, within the t=1 radius); "int8"
+is the lowest rung — per-channel weight scales baked in at pack time,
+per-row activation quantization, int32 accumulation — whose slightly
+larger perturbations RS absorbs the same way.  ``cfg.decode_schedule``
+picks the kernel blocking ("flat", "auto" = the autotune cache at
+``cfg.autotune_cache``, or an explicit "bb<N>-ct<N>[-db]" point); fp32
+output is bitwise identical on every schedule, so the schedule is a
+pure throughput knob (``kernels/autotune.py``).
 Per-image fold_in keys are derived once per batch (offline) or once per
 request (online) by ``StageRegistry.image_keys`` and flow to every
 stage through the payload as explicit inputs.
@@ -123,7 +130,9 @@ class DetectionConfig:
     fused_preprocess: bool = True
     tile_first: bool = True        # fuse tile selection into ingest
     fused_decode: bool = True      # Pallas fused-extractor decode kernel
-    decode_dtype: str = "fp32"     # fp32 (bit-exact) | bf16 (MXU compute)
+    decode_dtype: str = "fp32"     # fp32 (bit-exact) | bf16 | int8
+    decode_schedule: str = "flat"  # flat | auto | "bb<N>-ct<N>[-db]"
+    autotune_cache: str = ""       # schedule cache path for "auto"
     interleave: bool = True
     rs_threads: int = 32
     lane_budget: int = 8

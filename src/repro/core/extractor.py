@@ -99,7 +99,33 @@ def highpass(x):
 # -- matmul-form forward: the one body shared by the unfused XLA path
 # -- and the fused Pallas decode kernel (kernels/fused_extractor.py)
 
-DECODE_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16}
+DECODE_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16,
+                 "int8": jnp.int8}
+
+INT8_QMAX = 127.0
+
+
+def quantize_weight_int8(w2d):
+    """(K, N) fp32 weight -> (int8 weight, fp32 per-output-channel
+    scale (N,)): symmetric per-channel quantization, the static half of
+    the int8 decode rung (computed once at ``pack_params`` time)."""
+    scale = jnp.maximum(jnp.abs(w2d).max(axis=0),
+                        jnp.float32(1e-8)) / INT8_QMAX
+    q = jnp.clip(jnp.round(w2d / scale), -INT8_QMAX,
+                 INT8_QMAX).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def quantize_rows_int8(x2d):
+    """(M, K) fp32 activations -> (int8, fp32 per-row scale (M, 1)):
+    the dynamic half of the int8 rung.  Per-ROW scales keep the op
+    batch-stable (row i of a size-b batch quantizes exactly as it would
+    alone), which the ragged-serving/bit-identity contract needs."""
+    s = jnp.maximum(jnp.abs(x2d).max(axis=1, keepdims=True),
+                    jnp.float32(1e-8)) / INT8_QMAX
+    q = jnp.clip(jnp.round(x2d / s), -INT8_QMAX,
+                 INT8_QMAX).astype(jnp.int8)
+    return q, s
 
 
 def _shifts3x3(x):
@@ -111,7 +137,30 @@ def _shifts3x3(x):
             for dy in range(3) for dx in range(3)]
 
 
-def conv3x3_mm(x, w2d):
+def tap_dot(xs2d, w2d, tap, cin, scale=None):
+    """One tap's dot: (M, cin) shifted view x rows [tap*cin, (tap+1)*cin)
+    of a packed weight -> (M, cout), fp32 result.
+
+    THE per-tap primitive every decode path shares (the unfused graph,
+    the flat Pallas kernel, and the blocked kernel all accumulate these
+    in the same static tap order, which the bit-identity contract
+    depends on).  fp32/bf16 weights: cast input, MXU dot, fp32
+    accumulation.  int8 weights (``scale`` = the per-output-channel
+    dequant scale, column-sliced the same way as ``w2d`` when the
+    caller channel-tiles): dynamic per-row activation quantization,
+    int8 x int8 -> int32 dot, fp32 dequantize — so the int8 partial
+    sums join the same fp32 left-fold as the other rungs."""
+    wt = w2d[tap * cin: (tap + 1) * cin]
+    if w2d.dtype == jnp.int8:
+        xq, s = quantize_rows_int8(xs2d)
+        y = jax.lax.dot_general(xq, wt, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.int32)
+        return y.astype(jnp.float32) * s * scale[None, :]
+    return jnp.dot(xs2d.astype(w2d.dtype), wt,
+                   preferred_element_type=jnp.float32)
+
+
+def conv3x3_mm(x, w2d, scale=None):
     """SAME 3x3 conv as nine accumulated MXU matmuls: x (b, h, w, c) x
     packed weight (9c, cout) -> (b*h*w, cout), fp32 accumulation.
 
@@ -120,13 +169,12 @@ def conv3x3_mm(x, w2d):
     full-image sequential path and training also run this body).  Tap
     order is static, every tap dot keeps M = b*h*w, and the nine
     partial sums add elementwise — all batch-stable, which the
-    fused/unfused bit-identity contract depends on."""
+    fused/unfused bit-identity contract depends on.  ``scale`` carries
+    the int8 rung's per-channel dequant scales (see :func:`tap_dot`)."""
     b, h, w, c = x.shape
     acc = None
     for tap, xs in enumerate(_shifts3x3(x)):
-        y = jnp.dot(xs.reshape(b * h * w, c).astype(w2d.dtype),
-                    w2d[tap * c: (tap + 1) * c],
-                    preferred_element_type=jnp.float32)
+        y = tap_dot(xs.reshape(b * h * w, c), w2d, tap, c, scale)
         acc = y if acc is None else acc + y
     return acc
 
@@ -150,17 +198,30 @@ def pack_params(params, dtype="fp32"):
     stored in the compute ``dtype`` ("fp32" or "bf16" — the MXU input
     precision); every epilogue term (biases, corr_scale) stays fp32
     because accumulation and the norm/ReLU epilogue always run in
-    fp32."""
+    fp32.
+
+    "int8" is the lowest rung of the precision ladder: conv/to_bits
+    weights quantize symmetrically per output channel at pack time
+    (``quantize_weight_int8``, the scale rides along as a fp32
+    ``"scale"`` leaf), while head + correlation — a negligible FLOP
+    slice but the decision-critical epilogue — stay fp32."""
     cdt = DECODE_DTYPES[dtype] if isinstance(dtype, str) else dtype
+
+    def conv_entry(w4d, bias):
+        w2d = w4d.reshape(-1, w4d.shape[-1])
+        if cdt == jnp.int8:
+            q, scale = quantize_weight_int8(w2d.astype(jnp.float32))
+            return {"w": q, "scale": scale,
+                    "b": bias.astype(jnp.float32)}
+        return {"w": w2d.astype(cdt), "b": bias.astype(jnp.float32)}
+
+    # the head (and corr bank below) stay fp32 in int8 packs
+    hdt = jnp.float32 if cdt == jnp.int8 else cdt
     pk = {
-        "blocks": [{"w": b["w"].reshape(-1, b["w"].shape[-1]).astype(cdt),
-                    "b": b["b"].astype(jnp.float32)}
-                   for b in params["blocks"]],
-        "to_bits": {
-            "w": params["to_bits"]["w"].reshape(
-                -1, params["to_bits"]["w"].shape[-1]).astype(cdt),
-            "b": params["to_bits"]["b"].astype(jnp.float32)},
-        "head": {"w": params["head"]["w"].astype(cdt),
+        "blocks": [conv_entry(b["w"], b["b"]) for b in params["blocks"]],
+        "to_bits": conv_entry(params["to_bits"]["w"],
+                              params["to_bits"]["b"]),
+        "head": {"w": params["head"]["w"].astype(hdt),
                  "b": params["head"]["b"].astype(jnp.float32)},
     }
     if "corr" in params:
@@ -168,26 +229,34 @@ def pack_params(params, dtype="fp32"):
         # (n, t, t, 3) -> (t*t, n, 3): pixel-major so the correlation
         # reduces over (pixel, channel) with batch-stable shapes
         pk["corr"] = params["corr"].transpose(1, 2, 0, 3).reshape(
-            t * t, n, 3).astype(cdt)
+            t * t, n, 3).astype(hdt)
         pk["corr_scale"] = params["corr_scale"].astype(jnp.float32)
     return pk
 
 
+def _dequant_w(entry):
+    w = entry["w"].astype(jnp.float32)
+    if entry["w"].dtype == jnp.int8:
+        w = w * entry["scale"][None, :]
+    return w
+
+
 def unpack_params(packed):
     """Exact inverse of :func:`pack_params` for fp32 packs (bf16 packs
-    round-trip to the bf16-rounded weights)."""
+    round-trip to the bf16-rounded weights, int8 packs to the
+    dequantized q * scale weights)."""
     cin = 3
     blocks = []
     for blk in packed["blocks"]:
         cout = blk["w"].shape[-1]
-        blocks.append({"w": blk["w"].astype(jnp.float32).reshape(
-            3, 3, cin, cout), "b": blk["b"]})
+        blocks.append({"w": _dequant_w(blk).reshape(3, 3, cin, cout),
+                       "b": blk["b"]})
         cin = cout
     nb = packed["to_bits"]["w"].shape[-1]
     p = {
         "blocks": blocks,
-        "to_bits": {"w": packed["to_bits"]["w"].astype(
-            jnp.float32).reshape(3, 3, cin, nb),
+        "to_bits": {"w": _dequant_w(packed["to_bits"]).reshape(
+            3, 3, cin, nb),
             "b": packed["to_bits"]["b"]},
         "head": {"w": packed["head"]["w"].astype(jnp.float32),
                  "b": packed["head"]["b"]},
@@ -222,16 +291,19 @@ def extractor_forward_packed(packed, tiles):
 
     Matmul inputs are cast to the packed compute dtype; accumulation
     (``preferred_element_type``), the highpass (elementwise VPU work)
-    and the epilogue stay fp32.
+    and the epilogue stay fp32.  int8 packs route their conv matmuls
+    through the quantized ``tap_dot`` path (head/corr read the pack's
+    fp32 head dtype, so the fp32/bf16 graphs are untouched).
     """
     b, l = tiles.shape[0], tiles.shape[1]
-    cdt = packed["blocks"][0]["w"].dtype
+    cdt = packed["head"]["w"].dtype
     x = tiles
     for blk in packed["blocks"]:
-        y = conv3x3_mm(x, blk["w"])
+        y = conv3x3_mm(x, blk["w"], blk.get("scale"))
         x = jax.nn.relu(channel_norm(
             y.reshape(b, l, l, -1) + blk["b"]))
-    y = conv3x3_mm(x, packed["to_bits"]["w"])
+    y = conv3x3_mm(x, packed["to_bits"]["w"],
+                   packed["to_bits"].get("scale"))
     y = y.reshape(b, l, l, -1) + packed["to_bits"]["b"]
     g = y.mean(axis=(1, 2))  # GAP
     logits = (g.astype(cdt)[:, :, None] * packed["head"]["w"][None]

@@ -189,14 +189,30 @@ class StageRegistry:
         # extractor_forward graph (bit-identical to the fp32 kernel —
         # they share extractor_forward_packed)
         if self.fused_decode:
+            from repro.kernels import autotune as autotune_lib
             from repro.kernels import ops as kops
             self.packed_params = extractor_lib.pack_params(
                 self.params, cfg.decode_dtype)
+            # kernel schedule, resolved once per registry build: "flat"
+            # -> None (the flat kernel), "auto" -> the autotune cache
+            # (flat fallback with a printed hint on a miss), or an
+            # explicit "bb<N>-ct<N>[-db]" point.  fp32 output is bitwise
+            # schedule-independent, so this is purely a throughput knob.
+            self.decode_schedule = autotune_lib.resolve_schedule(
+                getattr(cfg, "decode_schedule", "flat"),
+                dtype=cfg.decode_dtype, tile=cfg.tile,
+                channels=self.params["blocks"][0]["w"].shape[-1],
+                depth=len(self.params["blocks"]),
+                n_bits=self.params["head"]["b"].shape[0],
+                cache_path=getattr(cfg, "autotune_cache", ""))
+            sched = self.decode_schedule
 
             def extract(tiles):
-                return kops.fused_extractor(tiles, self.packed_params)
+                return kops.fused_extractor(tiles, self.packed_params,
+                                            schedule=sched)
         else:
             self.packed_params = None
+            self.decode_schedule = None
 
             def extract(tiles):
                 return extractor_forward(self.params, tiles)

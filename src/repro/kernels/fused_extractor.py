@@ -5,34 +5,58 @@ conv stack, GAP + head, and the spread-spectrum correlation bank — is
 the last hot-path stage still running as an unfused XLA graph at full
 precision: every conv block round-trips its (l, l, C) activations
 through HBM, and QRMark §5.2 identifies exactly this stage as the
-GPU-intensive bottleneck that gets extra streams.  This kernel runs the
-*whole* forward in one ``pallas_call`` per tile batch:
+GPU-intensive bottleneck that gets extra streams.  Two kernels share
+one math contract:
 
-* each 3x3 conv block is an implicit-im2col MATMUL — nine tap-shifted
-  (l*l, C) x (C, C') MXU dots accumulated in static order against the
-  pre-packed (9*C, C') weight — with the bias + channel-norm + ReLU
-  epilogue fused into the same grid step, so inter-block activations
-  never leave VMEM (and no 9x patch matrix is ever materialised);
-* the GAP + head and the correlation path (nine-tap box highpass +
-  pattern-bank contraction) ride in the same step;
-* a precision policy picks the MXU input dtype: fp32 packs are
-  bit-identical to the unfused ``extractor_forward`` (oracle parity by
-  construction — both run ``extractor_forward_packed`` verbatim), bf16
-  packs compute the matmuls at bf16 (2x MXU throughput, half the weight
-  traffic) with fp32 accumulation and a fully fp32 epilogue.
+``fused_extractor`` (the *flat* schedule) runs the whole forward in one
+``pallas_call`` with grid=(b,), one image per step, by calling the
+shared ``extractor_forward_packed`` body verbatim inside the step.
 
-One grid step processes one image, mirroring the ingest kernels: the
-weights are broadcast to every step and the per-step VMEM working set
-stays activation-sized — padded activation + tap slice + accumulator,
-~3-4 MB fp32 (~half in bf16) at l=64, C=64, comfortably inside the
-~16 MB budget.  Per-step results are written straight to the
-(b, n_bits) logits output.
+``fused_extractor_blocked`` (the *blocked* schedule, this PR) re-blocks
+that step for throughput while keeping the accumulation order — and
+therefore fp32 bitwise output — exactly the same:
+
+* grid=(b // batch_block,): each step owns a (bb, l, l, 3) image block;
+* a padded-activation VMEM scratch (bb, l+2, l+2, C) holds every
+  inter-layer activation with its halo in place, so layers 1..D read
+  their nine tap-shifted views as scratch slices instead of re-running
+  a ``jnp.pad`` copy per layer (the flat kernel pays that copy D+1
+  times per image);
+* a (bb*l*l, C) accumulator scratch collects the conv output one
+  channel tile at a time: the weight's output columns are visited in
+  [j0, j0+ct) slices, nine N-restricted tap dots per slice.  N-slicing
+  a dot never reorders its K-accumulation, so any channel_tile is
+  bit-identical to the full-width dot (verified property; contrast
+  K-splitting, which is not).  A *cross-step* channel axis is
+  impossible here — channel_norm couples all C channels of a layer and
+  layer i+1 reads all of layer i — so the tile is an in-body loop that
+  bounds the live weight slice, not a grid dimension;
+* the bias + channel-norm + ReLU epilogue runs directly on the (M, C)
+  GEMM layout ("flat-norm") and the result lands in the scratch
+  interior; channel_norm reduces over the channel axis only, so
+  skipping the (bb, l, l, C) round-trip is bitwise free and removes
+  two reshape copies per layer;
+* GAP + head + correlation ride in the same step, written straight to
+  the (b, n_bits) logits output.
+
+The precision ladder is carried by the packed params, not the kernel:
+fp32 packs are bit-identical to the unfused path on either schedule
+(oracle parity by construction), bf16 packs run bf16-input MXU dots
+with fp32 accumulation, and int8 packs (``pack_params(..., "int8")``)
+run per-channel-scaled int8 weight x dynamically per-row-quantized
+activation dots with int32 accumulation and fp32 dequantize — all three
+share the per-tap ``tap_dot`` primitive, so RS error correction sees
+the same decode semantics at every rung.  (One caveat: int8 is bitwise
+schedule-independent only at full channel width — with channel_tile <
+C the dequant multiply-add chain may fuse differently per tile width,
+leaving ulp-level float noise that the decision layer never sees;
+fp32/bf16 are bitwise at every tile.)
 
 Bit-identity depends on every op in the shared body being batch-stable
-(see ``extractor_forward_packed``): the kernel computes image i with
-bb=1 shapes, the unfused path with bb=b shapes, and the body is written
-so both accumulate identically.  interpret=True executes on CPU (this
-container); interpret=False is the TPU target.
+(see ``extractor_forward_packed``).  interpret=True executes on CPU
+(this container); interpret=False is the TPU target, where
+``double_buffer`` requests parallel grid-dimension semantics so
+consecutive image blocks pipeline their HBM fetches.
 """
 from __future__ import annotations
 
@@ -40,7 +64,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.extractor import extractor_forward_packed
+try:  # TPU scratch/compiler params; present in this JAX, guarded anyway
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover - non-TPU builds
+    pltpu = None
+
+from repro.core.extractor import (channel_norm, extractor_forward_packed,
+                                  tap_dot)
 
 
 def _full_spec(shape):
@@ -51,11 +81,12 @@ def _full_spec(shape):
 
 def fused_extractor(tiles, packed, *, interpret: bool = True):
     """tiles (b, l, l, 3) f32 + packed extractor params -> (b, n_bits)
-    f32 logits.
+    f32 logits, flat schedule (grid=(b,), one image per step).
 
     ``packed`` is ``extractor.pack_params(params, dtype)`` — built once
     per pipeline, reused across every batch; its leaf dtypes select the
-    fp32 / bf16 compute path.  Not jitted here: callers jit around it.
+    fp32 / bf16 / int8 compute path.  Not jitted here: callers jit
+    around it.
     """
     b, l = tiles.shape[0], tiles.shape[1]
     n_bits = packed["head"]["b"].shape[0]
@@ -74,4 +105,136 @@ def fused_extractor(tiles, packed, *, interpret: bool = True):
         out_specs=pl.BlockSpec((1, n_bits), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, n_bits), jnp.float32),
         interpret=interpret,
+    )(tiles, *leaves)
+
+
+def _taps_fold(read_tap, entry, cin, j0, nj):
+    """Nine tap-shifted dots, N-restricted to weight columns
+    [j0, j0+nj), accumulated in the static left-fold order of
+    ``conv3x3_mm`` — bit-identical to the full-width conv's columns."""
+    w2d = entry["w"][:, j0: j0 + nj]
+    scale = entry.get("scale")
+    if scale is not None:
+        scale = scale[j0: j0 + nj]
+    acc = None
+    for tap in range(9):
+        y = tap_dot(read_tap(tap), w2d, tap, cin, scale)
+        acc = y if acc is None else acc + y
+    return acc
+
+
+def _scratch_shapes(bb, l, C):
+    """Padded-activation + channel-tile accumulator scratch in VMEM."""
+    if pltpu is None:  # pragma: no cover - jax builds without pallas-tpu
+        raise NotImplementedError(
+            "blocked decode schedule needs pallas TPU scratch shapes; "
+            "use the flat schedule (decode_schedule='flat') instead")
+    return [pltpu.VMEM((bb, l + 2, l + 2, C), jnp.float32),
+            pltpu.VMEM((bb * l * l, C), jnp.float32)]
+
+
+def fused_extractor_blocked(tiles, packed, *, batch_block: int = 1,
+                            channel_tile: int = 0,
+                            double_buffer: bool = True,
+                            interpret: bool = True):
+    """Blocked-schedule decode: tiles (b, l, l, 3) f32 -> (b, n_bits)
+    f32 logits, bitwise equal to ``fused_extractor`` for fp32 packs.
+
+    ``batch_block`` images per grid step (ragged batches are zero-padded
+    up to a multiple and the pad rows sliced off — every body op is
+    batch-stable, so pad rows cannot perturb real rows).
+    ``channel_tile`` bounds the output-column slice each inner dot
+    produces (0 = full width).  ``double_buffer`` marks the batch grid
+    dimension parallel on TPU so block fetches pipeline; it is a no-op
+    under interpret.
+    """
+    b, l = tiles.shape[0], tiles.shape[1]
+    n_bits = packed["head"]["b"].shape[0]
+    C = packed["blocks"][0]["w"].shape[-1]
+    bb = max(1, min(batch_block, b))
+    ct = min(channel_tile, C) if channel_tile else C
+
+    if b % bb:
+        pad = bb - b % bb
+        padded = jnp.concatenate(
+            [tiles, jnp.zeros((pad,) + tiles.shape[1:], tiles.dtype)])
+        return fused_extractor_blocked(
+            padded, packed, batch_block=bb, channel_tile=channel_tile,
+            double_buffer=double_buffer, interpret=interpret)[:b]
+
+    leaves, treedef = jax.tree.flatten(packed)
+    M = bb * l * l
+
+    def kernel(img_ref, *refs):
+        param_refs, out_ref = refs[:-3], refs[-3]
+        xp_ref, y_ref = refs[-2], refs[-1]
+        pk = jax.tree.unflatten(treedef, [r[...] for r in param_refs])
+        tiles_blk = img_ref[...]  # (bb, l, l, 3)
+        # zero the scratch borders once per step (the interior is
+        # overwritten every layer)
+        xp_ref[...] = jnp.zeros_like(xp_ref)
+
+        # layer 0 reads the image block directly (cin=3 taps)
+        x4 = jnp.pad(tiles_blk, ((0, 0), (1, 1), (1, 1), (0, 0)))
+
+        def read0(tap):
+            dy, dx = divmod(tap, 3)
+            return jax.lax.slice(
+                x4, (0, dy, dx, 0), (bb, dy + l, dx + l, 3)).reshape(M, 3)
+
+        def read_sc(tap):
+            dy, dx = divmod(tap, 3)
+            return xp_ref[:, dy: dy + l, dx: dx + l, :].reshape(M, C)
+
+        for li, blk in enumerate(pk["blocks"]):
+            read_tap, cin = (read0, 3) if li == 0 else (read_sc, C)
+            for j0 in range(0, C, ct):
+                nj = min(ct, C - j0)
+                y_ref[:, j0: j0 + nj] = _taps_fold(
+                    read_tap, blk, cin, j0, nj)
+            # flat-norm epilogue on the (M, C) GEMM layout
+            y = jax.nn.relu(channel_norm(y_ref[...] + blk["b"]))
+            xp_ref[:, 1: l + 1, 1: l + 1, :] = y.reshape(bb, l, l, C)
+
+        # to_bits (N=n_bits is small: always full width) + GAP + head
+        tb = pk["to_bits"]
+        yt = _taps_fold(read_sc, tb, C, 0, n_bits)
+        yt = yt.reshape(bb, l, l, n_bits) + tb["b"]
+        g = yt.mean(axis=(1, 2))
+        cdt = pk["head"]["w"].dtype
+        logits = (g.astype(cdt)[:, :, None] * pk["head"]["w"][None]
+                  ).astype(jnp.float32).sum(axis=1) + pk["head"]["b"]
+        if "corr" in pk and pk["corr"].shape[0] == l * l:
+            # highpass = img - box blur, the blur as the same nine-tap
+            # sum _box3x3 runs (reusing the layer-0 padded block)
+            accb = None
+            for tap in range(9):
+                dy, dx = divmod(tap, 3)
+                xs = jax.lax.slice(x4, (0, dy, dx, 0),
+                                   (bb, dy + l, dx + l, 3))
+                accb = xs if accb is None else accb + xs
+            hp = (tiles_blk - accb * (1.0 / 9.0)).reshape(bb, l * l, 1, 3)
+            corr = (hp.astype(cdt) * pk["corr"][None]
+                    ).astype(jnp.float32).sum(axis=(1, 3))
+            logits = logits + corr * pk["corr_scale"]
+        out_ref[...] = logits
+
+    kwargs = {}
+    if double_buffer and not interpret and pltpu is not None:
+        try:  # pipeline consecutive image blocks on TPU
+            kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+                dimension_semantics=("parallel",))
+        except (AttributeError, TypeError):  # pragma: no cover
+            pass
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b // bb,),
+        in_specs=[pl.BlockSpec((bb, l, l, 3), lambda i: (i, 0, 0, 0))] +
+                 [_full_spec(x.shape) for x in leaves],
+        out_specs=pl.BlockSpec((bb, n_bits), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_bits), jnp.float32),
+        scratch_shapes=_scratch_shapes(bb, l, C),
+        interpret=interpret,
+        **kwargs,
     )(tiles, *leaves)

@@ -37,15 +37,28 @@ def fused_tile_preprocess(raw, offsets, *, resize: int = 256,
                                   interpret=interpret)
 
 
-def fused_extractor(tiles, packed):
+def fused_extractor(tiles, packed, schedule=None):
     """Fused decode: the whole extractor forward (im2col-matmul conv
     blocks + GAP/head + correlation bank) in one kernel launch per tile
     batch.  ``packed`` = ``extractor.pack_params(params, dtype)``; its
-    dtype selects the fp32 (bit-exact vs ``extractor_forward``) or bf16
-    (MXU compute, fp32 accumulation) path."""
-    from repro.kernels.fused_extractor import fused_extractor as _fx
+    dtype selects the fp32 (bit-exact vs ``extractor_forward``), bf16
+    (MXU compute, fp32 accumulation) or int8 (per-channel-scaled
+    weights, int32 accumulation) path.
+
+    ``schedule`` picks the kernel blocking: ``None`` runs the flat
+    grid=(b,) kernel; a ``kernels.autotune.Schedule`` (or anything with
+    ``batch_block`` / ``channel_tile`` / ``double_buffer`` attributes)
+    runs the blocked kernel — fp32 output is bitwise identical either
+    way, so the schedule is purely a throughput knob."""
     interpret = jax.default_backend() != "tpu"
-    return _fx(tiles, packed, interpret=interpret)
+    if schedule is None:
+        from repro.kernels.fused_extractor import fused_extractor as _fx
+        return _fx(tiles, packed, interpret=interpret)
+    from repro.kernels.fused_extractor import fused_extractor_blocked
+    return fused_extractor_blocked(
+        tiles, packed, batch_block=schedule.batch_block,
+        channel_tile=schedule.channel_tile,
+        double_buffer=schedule.double_buffer, interpret=interpret)
 
 
 def rs_decode(bits, *, code=None):

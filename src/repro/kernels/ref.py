@@ -138,3 +138,18 @@ def fused_extractor_ref(params, tiles):
         corr = jnp.einsum("bhwc,nhwc->bn", hp, params["corr"])
         logits = logits + corr * params["corr_scale"]
     return logits
+
+
+def fused_extractor_int8_ref(packed, tiles):
+    """Semantic oracle for the int8 decode rung: run the shared matmul
+    body on *dequantized* fp32 weights (q * scale).
+
+    The real int8 path additionally quantizes activations per row, so
+    parity with this oracle is allclose at the activation-quantization
+    noise floor (~1/127 relative per tap), NOT bitwise — the test
+    contract for int8 is decision-level (hard-bit / RS-decode
+    agreement), with this oracle pinning the dequant semantics."""
+    from repro.core.extractor import (extractor_forward_packed,
+                                      pack_params, unpack_params)
+    return extractor_forward_packed(
+        pack_params(unpack_params(packed), "fp32"), tiles)

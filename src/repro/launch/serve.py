@@ -335,10 +335,28 @@ def main():
                     help="disable tile-first ingest (full-image "
                          "preprocess + tile select in decode)")
     ap.add_argument("--decode-dtype", default="fp32",
-                    choices=("fp32", "bf16"),
+                    choices=("fp32", "bf16", "int8"),
                     help="fused-decode precision policy: fp32 = "
                          "bit-exact vs the unfused extractor, bf16 = "
-                         "MXU compute with fp32 accumulation")
+                         "MXU compute with fp32 accumulation, int8 = "
+                         "per-channel-quantized weights with int32 "
+                         "accumulation (RS absorbs the extra bit "
+                         "noise)")
+    ap.add_argument("--schedule", default="flat",
+                    help="decode kernel schedule: 'flat' (one image "
+                         "per grid step), 'auto' (winner from the "
+                         "autotune cache), or an explicit "
+                         "'bb<N>-ct<N>[-db]' point")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep blocked decode schedules for this "
+                         "config before building the service, persist "
+                         "the winner in the autotune cache, and serve "
+                         "with it (implies --schedule auto)")
+    ap.add_argument("--autotune-cache", default="",
+                    help="schedule-cache JSON path (default: "
+                         "decode_schedules.json next to "
+                         "--compilation-cache when given, else "
+                         "experiments/autotune/decode_schedules.json)")
     ap.add_argument("--unfused-decode", action="store_true",
                     help="disable the fused Pallas extractor kernel "
                          "(decode runs the unfused XLA graph; warmup "
@@ -382,16 +400,36 @@ def main():
         print(f"compilation cache: "
               f"{args.compilation_cache if on else 'unsupported'}")
 
-    from repro.core.extractor import init_extractor
+    from repro.core.extractor import init_extractor, pack_params
     from repro.core.rs.codec import DEFAULT_CODE
     params = init_extractor(jax.random.key(0),
                             n_bits=DEFAULT_CODE.codeword_bits)
+
+    cache_path = args.autotune_cache
+    if not cache_path:
+        cache_path = ((args.compilation_cache.rstrip("/")
+                       + "/decode_schedules.json")
+                      if args.compilation_cache else
+                      "experiments/autotune/decode_schedules.json")
+    schedule = args.schedule
+    if args.autotune:
+        # populate (or reuse) the schedule cache before the service is
+        # built, so warmup profiles the tuned kernel
+        from repro.kernels import autotune as autotune_lib
+        autotune_lib.autotune(
+            pack_params(params, args.decode_dtype), tile=args.tile,
+            batch=args.batch, dtype=args.decode_dtype,
+            cache_path=cache_path)
+        schedule = "auto"
+
     cfg = DetectionConfig(tile=args.tile, img_size=args.img,
                           resize_src=args.img + args.img // 8,
                           mode=args.mode, rs_mode=args.rs_mode,
                           tile_first=not args.staged_ingest,
                           fused_decode=not args.unfused_decode,
                           decode_dtype=args.decode_dtype,
+                          decode_schedule=schedule,
+                          autotune_cache=cache_path,
                           escalate_tiles=args.escalate_tiles,
                           escalate_margin=args.escalate_margin)
     if args.online:
