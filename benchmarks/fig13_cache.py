@@ -1,0 +1,101 @@
+"""Fig. 13 (repo-native): content-addressed result cache under a
+Zipf repeat-heavy workload.
+
+Real provenance-checking traffic is repeat-heavy — the same viral
+image is checked by many users, retried by clients, and mirrored
+across feeds.  This figure drives the online server with an open-loop
+Poisson arrival process whose request images are drawn Zipf(s=1.1)
+from a fixed pool, with a 70/30 interactive/bulk priority mix, and
+compares two arms that see the *same* arrival and workload sequence:
+
+* ``nocache`` — SLO-tiered admission only (the fig11 runtime plus
+  priority classes);
+* ``cache`` — tier-1 exact perceptual-hash result cache + dedup-in-
+  flight on top (``DetectionConfig.cache_exact``).
+
+The claim: at the measured hit rate (>= 50% at s=1.1) the cache arm's
+mean request latency is strictly lower and the interactive class's
+p95 is no worse — hits bypass admission, queueing, and execution
+entirely, and coalesced duplicates stop multiplying executor load.
+Cache hits are bitwise the cold-path result (content-derived fold_in
+keys), so the speedup costs nothing in output fidelity.
+
+Writes ``experiments/bench/BENCH_cache.json``: one row per arm plus a
+``summary`` with the acceptance booleans.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+from repro.core.detect import DetectionConfig
+from repro.core.extractor import init_extractor
+from repro.core.rs.codec import DEFAULT_CODE
+from repro.launch.serve import run_online
+
+ZIPF_S = 1.1
+POOL = 12
+BULK_FRAC = 0.3
+# interactive preempts bulk; deadlines generalize fig11's max_wait_ms
+CLASSES = {"interactive": 8.0, "bulk": 40.0}
+
+
+def main(quick: bool = False):
+    img = 32 if quick else 64
+    tile = 16
+    raw = img + 32
+    duration = 2.5 if quick else 6.0
+    qps = 30.0 if quick else 24.0
+    max_batch = 8 if quick else 16
+    params = init_extractor(jax.random.key(0),
+                            n_bits=DEFAULT_CODE.codeword_bits,
+                            channels=8, depth=2)
+    rows = []
+    arms = {}
+    for arm, cache_on in (("nocache", False), ("cache", True)):
+        cfg = DetectionConfig(tile=tile, img_size=img,
+                              resize_src=img + img // 8, mode="qrmark",
+                              rs_mode="device", rs_threads=4,
+                              code=DEFAULT_CODE, cache_exact=cache_on)
+        rep = run_online(cfg, params, qps=qps, duration_s=duration,
+                         raw_size=raw, group=1, max_batch=max_batch,
+                         max_wait_ms=8.0, max_queue=128,
+                         classes=CLASSES, bulk_frac=BULK_FRAC,
+                         zipf=ZIPF_S, pool=POOL, seed=0, quiet=True)
+        rep["arm"] = arm
+        rows.append(rep)
+        arms[arm] = rep
+        cache = rep.get("cache", {})
+        common.emit(
+            f"fig13/{arm}",
+            rep["latency_ms"]["mean"] / 1e3,
+            f"p95i={rep['latency_ms_by_class']['interactive']['p95']}ms;"
+            f"hit_rate={cache.get('hit_rate', 0.0)};"
+            f"rps={rep['throughput_rps']};rej={rep['rejected']}")
+    base, cached = arms["nocache"], arms["cache"]
+    p95_base = base["latency_ms_by_class"]["interactive"]["p95"]
+    p95_cache = cached["latency_ms_by_class"]["interactive"]["p95"]
+    hit_rate = cached["cache"]["hit_rate"]
+    summary = {
+        "zipf_s": ZIPF_S, "pool": POOL, "bulk_frac": BULK_FRAC,
+        "hit_rate": hit_rate,
+        "mean_ms_nocache": base["latency_ms"]["mean"],
+        "mean_ms_cache": cached["latency_ms"]["mean"],
+        "interactive_p95_ms_nocache": p95_base,
+        "interactive_p95_ms_cache": p95_cache,
+        "hit_rate_ge_50pct": hit_rate >= 0.5,
+        "mean_strictly_better": (cached["latency_ms"]["mean"]
+                                 < base["latency_ms"]["mean"]),
+        "interactive_p95_no_worse": p95_cache <= p95_base,
+    }
+    print(f"# fig13 hit_rate={hit_rate:.3f} "
+          f"mean {base['latency_ms']['mean']:.2f}ms -> "
+          f"{cached['latency_ms']['mean']:.2f}ms, "
+          f"interactive p95 {p95_base:.2f}ms -> {p95_cache:.2f}ms",
+          flush=True)
+    common.save_json("BENCH_cache", {"rows": rows, "summary": summary})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

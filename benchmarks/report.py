@@ -113,12 +113,45 @@ def roofline_section():
     return "\n".join(lines)
 
 
+def bench_section():
+    """Summaries of the experiments/bench JSON artifacts that carry an
+    acceptance-style summary block (fig11 online serving, fig13 cache)
+    — the serving-side counterpart of the dryrun/roofline tables."""
+    lines = ["## §Bench — serving artifacts", ""]
+    p = common.OUT_DIR / "BENCH_online.json"
+    if p.exists():
+        s = json.loads(p.read_text()).get("summary", {})
+        lines.append(
+            f"- fig11 sustained qps @ p95<="
+            f"{s.get('latency_budget_ms')}ms: {s.get('sustained_qps')} "
+            f"(qrmark/sequential = {s.get('qrmark_vs_sequential')})")
+    p = common.OUT_DIR / "BENCH_cache.json"
+    if p.exists():
+        s = json.loads(p.read_text()).get("summary", {})
+        lines.append(
+            f"- fig13 content cache @ Zipf s={s.get('zipf_s')}: "
+            f"hit_rate={s.get('hit_rate')}, mean "
+            f"{s.get('mean_ms_nocache')}ms -> "
+            f"{s.get('mean_ms_cache')}ms, interactive p95 "
+            f"{s.get('interactive_p95_ms_nocache')}ms -> "
+            f"{s.get('interactive_p95_ms_cache')}ms "
+            f"(hit>=50%: {s.get('hit_rate_ge_50pct')}, "
+            f"mean better: {s.get('mean_strictly_better')}, "
+            f"p95 no worse: {s.get('interactive_p95_no_worse')})")
+    if len(lines) == 2:
+        lines.append("- no BENCH_*.json artifacts yet "
+                     "(run `python -m benchmarks.run`)")
+    return "\n".join(lines)
+
+
 def main(quick=False):
     print(dryrun_section())
     print()
     print(roofline_section())
     print()
     print(optimized_section())
+    print()
+    print(bench_section())
 
 
 def optimized_section():

@@ -31,6 +31,8 @@ MODULES = [
      "Fig 11: online serving — offered load vs latency percentiles"),
     ("fig12_escalation",
      "Fig 12: adaptive multi-tile escalation under attacks"),
+    ("fig13_cache",
+     "Fig 13: content cache + SLO admission under Zipf load"),
     ("alloc_adaptivity", "§3: stream-allocation adaptivity"),
     ("kernel_fusion", "App B.1: preprocess kernel fusion"),
     ("roofline", "§Roofline: per-stage achieved vs roofline FLOPs"),

@@ -119,7 +119,18 @@ class DetectionConfig:
     images on up to k-1 additional non-colliding tiles, accumulating
     soft bits between RS attempts.  ``escalate_margin`` > 0 also
     escalates images whose mean |logit| is below the margin even when
-    RS formally succeeded."""
+    RS formally succeeded.
+
+    Cache knobs (consumed by the online ``serving.DetectionServer``;
+    offline engines ignore them): ``cache_exact`` enables the tier-1
+    perceptual-hash result cache plus dedup-in-flight — and switches
+    keyless requests to *content-derived* keys
+    (``fold_in(key(seed), phash fingerprint)``), so identical pixels
+    produce identical keys and a cache hit is bitwise what the cold
+    path would compute.  ``cache_embedding_threshold`` > 0 enables the
+    tier-2 near-duplicate cache over the extractor's GAP embedding
+    (approximate by design; it only short-circuits escalation
+    rounds)."""
     tile: int = 64
     img_size: int = 256
     resize_src: int = 288          # raw -> resize -> centercrop(img_size)
@@ -138,6 +149,11 @@ class DetectionConfig:
     lane_budget: int = 8
     escalate_tiles: int = 1        # max tiles/image (1 = no escalation)
     escalate_margin: float = 0.0   # mean-|logit| floor (0 = RS-only)
+    # -- online result cache (serving.cache; offline engines ignore) --
+    cache_exact: bool = False      # tier-1 exact phash cache + dedup
+    cache_embedding_threshold: float = 0.0  # tier-2 cosine floor (0=off)
+    cache_capacity: int = 256      # tier-1 LRU entries (requests)
+    cache_embedding_capacity: int = 512  # tier-2 LRU entries (images)
     seed: int = 0
 
 

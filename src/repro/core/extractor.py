@@ -270,10 +270,14 @@ def unpack_params(packed):
     return p
 
 
-def extractor_forward_packed(packed, tiles):
-    """The decode-stage forward on packed params: im2col-as-matmul conv
-    blocks with the channel-norm + ReLU epilogue, GAP + head, and the
-    spread-spectrum correlation path.
+def extractor_forward_packed_embed(packed, tiles):
+    """:func:`extractor_forward_packed` that additionally returns the
+    GAP vector ``g`` — the to_bits global-average-pooled features the
+    head consumes.  ``g`` is the serving tier's near-duplicate
+    embedding (``serving.cache.EmbeddingCache``): it already exists on
+    the logits path, so exposing it costs one extra kernel output and
+    zero extra arithmetic, and the logits are computed by the exact
+    same ops either way (bitwise identical to the embed-free call).
 
     This is THE shared body: ``extractor_forward`` (the unfused XLA
     graph) and the Pallas kernel grid step (block shape (1, l, l, 3))
@@ -315,7 +319,14 @@ def extractor_forward_packed(packed, tiles):
         corr = (hp.astype(cdt) * packed["corr"][None]
                 ).astype(jnp.float32).sum(axis=(1, 3))
         logits = logits + corr * packed["corr_scale"]
-    return logits
+    return logits, g
+
+
+def extractor_forward_packed(packed, tiles):
+    """tiles (b, l, l, 3) on packed params -> (b, n_bits) f32 logits —
+    the embed-free view of :func:`extractor_forward_packed_embed` (same
+    ops, same order; the GAP vector is simply not returned)."""
+    return extractor_forward_packed_embed(packed, tiles)[0]
 
 
 def extractor_forward(params, tiles):
@@ -327,6 +338,14 @@ def extractor_forward(params, tiles):
     unfused path by construction.  Packing inside jit is free (reshapes
     and casts constant-fold)."""
     return extractor_forward_packed(pack_params(params), tiles)
+
+
+def extractor_forward_embed(params, tiles):
+    """Unfused forward returning (logits, gap_embedding) — the
+    embed-emitting decode for pipelines running without the fused
+    kernel (``fused_decode=False``).  Logits are bitwise identical to
+    :func:`extractor_forward` (same body, same op order)."""
+    return extractor_forward_packed_embed(pack_params(params), tiles)
 
 
 # ---------------------------------------------------------------------------

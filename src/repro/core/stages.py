@@ -141,6 +141,14 @@ class StageRegistry:
                 "escalate_tiles=1 — the margin trigger only fires "
                 "when there is a tile budget to escalate into; set "
                 "escalate_tiles > 1 (or margin to 0)")
+        thr = getattr(cfg, "cache_embedding_threshold", 0.0)
+        if not 0.0 <= thr <= 1.0:
+            raise ValueError(
+                f"cache_embedding_threshold must be in [0, 1] (cosine "
+                f"floor; 0 disables the tier), got {thr}")
+        if getattr(cfg, "cache_capacity", 1) < 1 or \
+                getattr(cfg, "cache_embedding_capacity", 1) < 1:
+            raise ValueError("cache capacities must be >= 1")
         if k > 1:
             if cfg.mode == "sequential":
                 raise ValueError(
@@ -179,6 +187,18 @@ class StageRegistry:
         the enclosing graph, so deriving here vs inline is identical)."""
         return self._image_keys_jit(key, b)
 
+    def content_key(self, fingerprint: int):
+        """Content-addressed request key:
+        ``fold_in(key(cfg.seed), fingerprint32(content digest))``.
+        The serving tier uses this for keyless requests when the exact
+        result cache is on — identical pixels then deterministically
+        produce identical per-image keys, which is what makes a cache
+        hit bitwise equal to the cold path (``fold_in`` is integer
+        hashing, so this is the same contract as :meth:`batch_key`
+        with content taking the place of arrival order)."""
+        return jax.random.fold_in(self.base_key,
+                                  np.uint32(fingerprint & 0xFFFFFFFF))
+
     # -- build ----------------------------------------------------------
     def _build(self):
         cfg = self.cfg
@@ -210,12 +230,21 @@ class StageRegistry:
             def extract(tiles):
                 return kops.fused_extractor(tiles, self.packed_params,
                                             schedule=sched)
+
+            def extract_embed(tiles):
+                return kops.fused_extractor(tiles, self.packed_params,
+                                            schedule=sched,
+                                            with_embed=True)
         else:
             self.packed_params = None
             self.decode_schedule = None
 
             def extract(tiles):
                 return extractor_forward(self.params, tiles)
+
+            def extract_embed(tiles):
+                return extractor_lib.extractor_forward_embed(
+                    self.params, tiles)
 
         def preprocess(raw):
             if cfg.fused_preprocess and cfg.mode == "qrmark":
@@ -248,8 +277,22 @@ class StageRegistry:
                     cfg.strategy, keys, x, cfg.tile)
             return extract(tiles)
 
+        # embed-emitting decode: same tile selection, extractor returns
+        # (logits, gap_embedding).  The logits ops are identical —
+        # asserted by tests — so the serving tier can swap this in for
+        # round-0 decode whenever the near-duplicate cache is on
+        # without perturbing the bit-identity contract.
+        def decode_keyed_embed(x, keys):
+            if self.tile_first or cfg.mode == "sequential":
+                tiles = x
+            else:
+                tiles, _ = tiling.select_tiles_per_image(
+                    cfg.strategy, keys, x, cfg.tile)
+            return extract_embed(tiles)
+
         self.ingest_keyed = jax.jit(ingest_keyed)
         self.decode_keyed = jax.jit(decode_keyed)
+        self.decode_keyed_embed = jax.jit(decode_keyed_embed)
         self.bits = jax.jit(lambda logits: (logits > 0).astype(jnp.int32))
 
         # -- escalation compute (cfg.escalate_tiles > 1) ---------------
@@ -448,7 +491,8 @@ class StageRegistry:
     def build_stages(self, lanes: Dict[str, int],
                      finish: Optional[Callable[[dict], Any]] = None,
                      depth: int = 2,
-                     escalate_inline: bool = True
+                     escalate_inline: bool = True,
+                     emit_embed: bool = False
                      ) -> List[lanes_lib.Stage]:
         """The detection stage graph — THE payload contract every
         executor-driven engine (offline run_stream, online server)
@@ -471,7 +515,11 @@ class StageRegistry:
         escalation micro-batches take.  With ``escalate_inline=True``
         (the offline engines) round-0 payloads instead run the whole
         adaptive loop synchronously on the rs lane via
-        :meth:`escalate`, annotating the payload with ``tiles_used``."""
+        :meth:`escalate`, annotating the payload with ``tiles_used``.
+
+        ``emit_embed=True`` (the server with the near-duplicate cache
+        on) makes round-0 decode also emit the GAP embedding as payload
+        field ``embed`` — logits are bitwise unchanged."""
 
         def st_ingest(p):
             r = p.get("round", 0)
@@ -487,6 +535,9 @@ class StageRegistry:
         def st_decode(p):
             if p.get("round", 0) > 0:
                 logits = self.decode_tiles(p["x"])
+            elif emit_embed:
+                logits, p["embed"] = self.decode_keyed_embed(
+                    p["x"], p["keys"])
             else:
                 logits = self.decode_keyed(p["x"], p["keys"])
             if p.get("acc_logits") is not None:

@@ -69,8 +69,8 @@ try:  # TPU scratch/compiler params; present in this JAX, guarded anyway
 except ImportError:  # pragma: no cover - non-TPU builds
     pltpu = None
 
-from repro.core.extractor import (channel_norm, extractor_forward_packed,
-                                  tap_dot)
+from repro.core.extractor import (channel_norm,
+                                  extractor_forward_packed_embed, tap_dot)
 
 
 def _full_spec(shape):
@@ -79,7 +79,8 @@ def _full_spec(shape):
     return pl.BlockSpec(shape, lambda i, _nd=nd: (0,) * _nd)
 
 
-def fused_extractor(tiles, packed, *, interpret: bool = True):
+def fused_extractor(tiles, packed, *, interpret: bool = True,
+                    with_embed: bool = False):
     """tiles (b, l, l, 3) f32 + packed extractor params -> (b, n_bits)
     f32 logits, flat schedule (grid=(b,), one image per step).
 
@@ -87,23 +88,35 @@ def fused_extractor(tiles, packed, *, interpret: bool = True):
     per pipeline, reused across every batch; its leaf dtypes select the
     fp32 / bf16 / int8 compute path.  Not jitted here: callers jit
     around it.
+
+    ``with_embed=True`` returns ``(logits, embed)`` where ``embed`` is
+    the (b, n_bits) f32 GAP vector the head consumes — an intermediate
+    the kernel already computes, written to a second output block.  The
+    logits path is untouched op-for-op, so fp32 logits are bitwise
+    identical with or without the extra output.
     """
     b, l = tiles.shape[0], tiles.shape[1]
     n_bits = packed["head"]["b"].shape[0]
     leaves, treedef = jax.tree.flatten(packed)
+    n_out = 2 if with_embed else 1
 
     def kernel(img_ref, *refs):
-        param_refs, out_ref = refs[:-1], refs[-1]
+        param_refs, out_refs = refs[:-n_out], refs[-n_out:]
         pk = jax.tree.unflatten(treedef, [r[...] for r in param_refs])
-        out_ref[...] = extractor_forward_packed(pk, img_ref[...])
+        logits, g = extractor_forward_packed_embed(pk, img_ref[...])
+        out_refs[0][...] = logits
+        if with_embed:
+            out_refs[1][...] = g
 
+    out_spec = pl.BlockSpec((1, n_bits), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((b, n_bits), jnp.float32)
     return pl.pallas_call(
         kernel,
         grid=(b,),
         in_specs=[pl.BlockSpec((1, l, l, 3), lambda i: (i, 0, 0, 0))] +
                  [_full_spec(x.shape) for x in leaves],
-        out_specs=pl.BlockSpec((1, n_bits), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, n_bits), jnp.float32),
+        out_specs=[out_spec] * n_out if with_embed else out_spec,
+        out_shape=[out_shape] * n_out if with_embed else out_shape,
         interpret=interpret,
     )(tiles, *leaves)
 
@@ -136,7 +149,8 @@ def _scratch_shapes(bb, l, C):
 def fused_extractor_blocked(tiles, packed, *, batch_block: int = 1,
                             channel_tile: int = 0,
                             double_buffer: bool = True,
-                            interpret: bool = True):
+                            interpret: bool = True,
+                            with_embed: bool = False):
     """Blocked-schedule decode: tiles (b, l, l, 3) f32 -> (b, n_bits)
     f32 logits, bitwise equal to ``fused_extractor`` for fp32 packs.
 
@@ -146,7 +160,9 @@ def fused_extractor_blocked(tiles, packed, *, batch_block: int = 1,
     ``channel_tile`` bounds the output-column slice each inner dot
     produces (0 = full width).  ``double_buffer`` marks the batch grid
     dimension parallel on TPU so block fetches pipeline; it is a no-op
-    under interpret.
+    under interpret.  ``with_embed=True`` adds a second (b, n_bits)
+    output carrying the GAP vector (see ``fused_extractor``); the
+    logits ops are unchanged.
     """
     b, l = tiles.shape[0], tiles.shape[1]
     n_bits = packed["head"]["b"].shape[0]
@@ -158,16 +174,23 @@ def fused_extractor_blocked(tiles, packed, *, batch_block: int = 1,
         pad = bb - b % bb
         padded = jnp.concatenate(
             [tiles, jnp.zeros((pad,) + tiles.shape[1:], tiles.dtype)])
-        return fused_extractor_blocked(
+        out = fused_extractor_blocked(
             padded, packed, batch_block=bb, channel_tile=channel_tile,
-            double_buffer=double_buffer, interpret=interpret)[:b]
+            double_buffer=double_buffer, interpret=interpret,
+            with_embed=with_embed)
+        if with_embed:
+            return out[0][:b], out[1][:b]
+        return out[:b]
 
     leaves, treedef = jax.tree.flatten(packed)
     M = bb * l * l
+    n_out = 2 if with_embed else 1
 
     def kernel(img_ref, *refs):
-        param_refs, out_ref = refs[:-3], refs[-3]
+        param_refs = refs[:-(n_out + 2)]
+        out_refs = refs[-(n_out + 2):-2]
         xp_ref, y_ref = refs[-2], refs[-1]
+        out_ref = out_refs[0]
         pk = jax.tree.unflatten(treedef, [r[...] for r in param_refs])
         tiles_blk = img_ref[...]  # (bb, l, l, 3)
         # zero the scratch borders once per step (the interior is
@@ -201,6 +224,8 @@ def fused_extractor_blocked(tiles, packed, *, batch_block: int = 1,
         yt = _taps_fold(read_sc, tb, C, 0, n_bits)
         yt = yt.reshape(bb, l, l, n_bits) + tb["b"]
         g = yt.mean(axis=(1, 2))
+        if with_embed:
+            out_refs[1][...] = g
         cdt = pk["head"]["w"].dtype
         logits = (g.astype(cdt)[:, :, None] * pk["head"]["w"][None]
                   ).astype(jnp.float32).sum(axis=1) + pk["head"]["b"]
@@ -227,13 +252,15 @@ def fused_extractor_blocked(tiles, packed, *, batch_block: int = 1,
         except (AttributeError, TypeError):  # pragma: no cover
             pass
 
+    out_spec = pl.BlockSpec((bb, n_bits), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((b, n_bits), jnp.float32)
     return pl.pallas_call(
         kernel,
         grid=(b // bb,),
         in_specs=[pl.BlockSpec((bb, l, l, 3), lambda i: (i, 0, 0, 0))] +
                  [_full_spec(x.shape) for x in leaves],
-        out_specs=pl.BlockSpec((bb, n_bits), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, n_bits), jnp.float32),
+        out_specs=[out_spec] * n_out if with_embed else out_spec,
+        out_shape=[out_shape] * n_out if with_embed else out_shape,
         scratch_shapes=_scratch_shapes(bb, l, C),
         interpret=interpret,
         **kwargs,

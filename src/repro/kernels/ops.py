@@ -37,7 +37,7 @@ def fused_tile_preprocess(raw, offsets, *, resize: int = 256,
                                   interpret=interpret)
 
 
-def fused_extractor(tiles, packed, schedule=None):
+def fused_extractor(tiles, packed, schedule=None, with_embed=False):
     """Fused decode: the whole extractor forward (im2col-matmul conv
     blocks + GAP/head + correlation bank) in one kernel launch per tile
     batch.  ``packed`` = ``extractor.pack_params(params, dtype)``; its
@@ -49,16 +49,22 @@ def fused_extractor(tiles, packed, schedule=None):
     grid=(b,) kernel; a ``kernels.autotune.Schedule`` (or anything with
     ``batch_block`` / ``channel_tile`` / ``double_buffer`` attributes)
     runs the blocked kernel — fp32 output is bitwise identical either
-    way, so the schedule is purely a throughput knob."""
+    way, so the schedule is purely a throughput knob.
+
+    ``with_embed=True`` returns ``(logits, embed)``: the GAP vector is
+    emitted as a second kernel output (no extra arithmetic; logits
+    bitwise unchanged) — the serving tier's near-duplicate cache key."""
     interpret = jax.default_backend() != "tpu"
     if schedule is None:
         from repro.kernels.fused_extractor import fused_extractor as _fx
-        return _fx(tiles, packed, interpret=interpret)
+        return _fx(tiles, packed, interpret=interpret,
+                   with_embed=with_embed)
     from repro.kernels.fused_extractor import fused_extractor_blocked
     return fused_extractor_blocked(
         tiles, packed, batch_block=schedule.batch_block,
         channel_tile=schedule.channel_tile,
-        double_buffer=schedule.double_buffer, interpret=interpret)
+        double_buffer=schedule.double_buffer, interpret=interpret,
+        with_embed=with_embed)
 
 
 def rs_decode(bits, *, code=None):

@@ -13,7 +13,11 @@ Two serving regimes:
 * **online** (``--online``, :class:`repro.serving.DetectionServer`) —
   per-request submissions arriving over time through an open-loop
   Poisson load generator (:func:`open_loop_load`): dynamic
-  micro-batching, admission control, per-request latency percentiles.
+  micro-batching, SLO-tiered admission control (``--classes`` /
+  ``--bulk-frac``), content-addressed result caching
+  (``--cache-exact`` / ``--cache-embed-threshold``) with an optional
+  Zipf repeat-heavy workload (``--zipf`` / ``--pool``), and
+  per-request / per-class latency percentiles.
 """
 from __future__ import annotations
 
@@ -206,14 +210,20 @@ class DetectionService:
 
 def open_loop_load(server, *, qps: float, duration_s: float,
                    make_images: Callable[[int], np.ndarray],
-                   seed: int = 0) -> dict:
+                   seed: int = 0,
+                   priority: Optional[Callable[[int],
+                                               Optional[str]]] = None
+                   ) -> dict:
     """Open-loop Poisson load generator (the online serving regime).
 
     Request k arrives at exponential inter-arrival gaps of mean
     ``1/qps`` **regardless of completions** — unlike closed-loop
     drivers, queueing delay is exposed instead of self-throttled, so
     latency percentiles vs offered load mean something.  Rejected
-    submissions (admission backpressure) are counted, not retried.
+    submissions (admission backpressure) are counted, not retried —
+    and counted *separately* from execution failures, which surface
+    later through the handles.  ``priority`` maps request index ->
+    admission class (None = the server's highest class).
 
     Returns {handles, offered, rejected, wall_s}; call
     ``server.stats()`` after draining for the latency/throughput view.
@@ -229,7 +239,9 @@ def open_loop_load(server, *, qps: float, duration_s: float,
         if now < t_next:
             time.sleep(t_next - now)
         try:
-            handles.append(server.submit(make_images(k)))
+            handles.append(server.submit(
+                make_images(k),
+                priority=priority(k) if priority else None))
         except AdmissionError:
             rejected += 1
         k += 1
@@ -238,14 +250,28 @@ def open_loop_load(server, *, qps: float, duration_s: float,
             "wall_s": time.perf_counter() - t0}
 
 
+def _lat_ms(dist: dict) -> dict:
+    return {k: round(dist.get(k, float("nan")) * 1e3, 2)
+            for k in ("p50", "p95", "p99", "mean")}
+
+
 def run_online(cfg: DetectionConfig, params, *, qps: float,
                duration_s: float, raw_size: int, group: int = 1,
                max_batch: int = 16, max_wait_ms: float = 10.0,
                max_queue: int = 256, lanes: int = 0,
                realloc_every: int = 0, seed: int = 0,
-               quiet: bool = False) -> dict:
+               classes: Optional[Dict[str, float]] = None,
+               bulk_frac: float = 0.0, zipf: float = 0.0,
+               pool: int = 0, quiet: bool = False) -> dict:
     """Build a :class:`~repro.serving.DetectionServer`, warm it up,
-    drive it with Poisson arrivals, drain, and report."""
+    drive it with Poisson arrivals, drain, and report.
+
+    ``classes`` enables SLO-tiered admission ({name: deadline_ms},
+    first = highest priority); ``bulk_frac`` of requests are then sent
+    as the *lowest* class.  ``pool`` > 0 draws each request's images
+    from a fixed pool of ``pool`` synthetic images — uniformly, or
+    Zipf-skewed with exponent ``zipf`` > 1 — the repeat-heavy
+    workload the content cache is for."""
     from repro.serving import BatcherConfig, DetectionServer
     lane_map = (None if lanes == 0 else
                 {"ingest": 1, "decode": max(1, lanes),
@@ -254,7 +280,7 @@ def run_online(cfg: DetectionConfig, params, *, qps: float,
         cfg, params,
         batcher=BatcherConfig(max_batch=max_batch,
                               max_wait_ms=max_wait_ms,
-                              max_queue=max_queue),
+                              max_queue=max_queue, classes=classes),
         lanes=lane_map, realloc_every=realloc_every)
     buckets = srv.warmup(data_lib.synth_image(0, raw_size))
     if not quiet:
@@ -263,25 +289,49 @@ def run_online(cfg: DetectionConfig, params, *, qps: float,
     srv.start()
     srv.metrics.reset()
 
+    wl_rng = np.random.default_rng(seed + 1)  # workload draws, not
+    #                                           arrival gaps
+
+    def pool_index(k: int) -> int:
+        if pool <= 0:
+            return k
+        if zipf > 1.0:
+            return int((wl_rng.zipf(zipf) - 1) % pool)
+        return int(wl_rng.integers(pool))
+
     def make_images(k: int) -> np.ndarray:
-        return np.stack([data_lib.synth_image(1000 + k * group + i,
+        base = pool_index(k)
+        return np.stack([data_lib.synth_image(1000 + base * group + i,
                                               raw_size)
                          for i in range(group)])
 
+    priority = None
+    if classes and bulk_frac > 0.0:
+        names = list(classes)
+
+        def priority(k: int) -> str:
+            return (names[-1] if wl_rng.random() < bulk_frac
+                    else names[0])
+
     load = open_loop_load(srv, qps=qps, duration_s=duration_s,
-                          make_images=make_images, seed=seed)
+                          make_images=make_images, seed=seed,
+                          priority=priority)
     srv.drain(timeout=120.0)
     stats = srv.stats()
     srv.close()
-    lat = stats.get("request_latency_s", {})
+    failed = int(stats["counters"].get("requests_failed", 0))
     report = {
         "qps_offered": qps, "duration_s": duration_s, "group": group,
-        "offered": load["offered"], "rejected": load["rejected"],
+        "offered": load["offered"],
+        # rejected (admission backpressure) and failed (execution
+        # errors) are different outcomes — never folded together
+        "rejected": load["rejected"],
+        "rejection_rate": round(stats["rejection_rate"], 4),
+        "failed": failed,
         "completed": int(stats["counters"].get("requests_completed", 0)),
         "throughput_rps": round(stats["throughput_rps"], 2),
         "throughput_ips": round(stats["throughput_ips"], 2),
-        "latency_ms": {k: round(lat.get(k, float("nan")) * 1e3, 2)
-                       for k in ("p50", "p95", "p99", "mean")},
+        "latency_ms": _lat_ms(stats.get("request_latency_s", {})),
         "batch_occupancy": round(
             stats.get("batch_occupancy", {}).get("mean", float("nan")),
             3),
@@ -289,6 +339,19 @@ def run_online(cfg: DetectionConfig, params, *, qps: float,
         "lanes": stats["lanes"],
         "straggler_retries": stats["straggler_retries"],
     }
+    if classes:
+        report["latency_ms_by_class"] = {
+            c: _lat_ms(stats.get(f"request_latency_{c}_s", {}))
+            for c in classes}
+    if getattr(cfg, "cache_exact", False) or \
+            getattr(cfg, "cache_embedding_threshold", 0.0) > 0:
+        report["cache"] = {
+            "hit_exact": stats["cache_hit_exact"],
+            "hit_embed": stats["cache_hit_embed"],
+            "miss": stats["cache_miss"],
+            "dedup_coalesced": stats["dedup_coalesced"],
+            "hit_rate": round(stats["cache_hit_rate"], 4),
+        }
     if srv.registry.policy.enabled:
         report["escalation_rate"] = round(stats["escalation_rate"], 4)
         report["escalation_batches"] = stats["escalation_batches"]
@@ -383,6 +446,32 @@ def main():
     ap.add_argument("--realloc-every", type=int, default=0,
                     help="re-run Algorithm 1 on measured stage "
                          "latencies every N micro-batches (0 = off)")
+    ap.add_argument("--cache-exact", action="store_true",
+                    help="tier-1 content-addressed result cache + "
+                         "dedup-in-flight (--online); keyless requests "
+                         "switch to content-derived fold_in keys so "
+                         "hits are bitwise the cold-path result")
+    ap.add_argument("--cache-embed-threshold", type=float, default=0.0,
+                    help="tier-2 near-duplicate cache cosine threshold "
+                         "over the extractor GAP embedding (0 = off; "
+                         "approximate — only short-circuits "
+                         "escalation rounds)")
+    ap.add_argument("--classes", default="",
+                    help="SLO admission classes for --online as "
+                         "'name:deadline_ms,...', first = highest "
+                         "priority (e.g. 'interactive:5,bulk:50'); "
+                         "empty = single class at --max-wait-ms")
+    ap.add_argument("--bulk-frac", type=float, default=0.0,
+                    help="fraction of --online requests submitted as "
+                         "the lowest class (requires --classes)")
+    ap.add_argument("--zipf", type=float, default=0.0,
+                    help="Zipf exponent (> 1) skewing --pool draws — "
+                         "the repeat-heavy workload the content cache "
+                         "targets (0 = uniform)")
+    ap.add_argument("--pool", type=int, default=0,
+                    help="draw --online request images from a fixed "
+                         "pool of this many distinct synthetic images "
+                         "(0 = every request distinct)")
     ap.add_argument("--escalate-tiles", type=int, default=1,
                     help="adaptive escalation tile budget per image "
                          "(1 = single-tile fast path only; k > 1 "
@@ -431,15 +520,26 @@ def main():
                           decode_schedule=schedule,
                           autotune_cache=cache_path,
                           escalate_tiles=args.escalate_tiles,
-                          escalate_margin=args.escalate_margin)
+                          escalate_margin=args.escalate_margin,
+                          cache_exact=args.cache_exact,
+                          cache_embedding_threshold=(
+                              args.cache_embed_threshold))
     if args.online:
+        classes = None
+        if args.classes:
+            classes = {}
+            for part in args.classes.split(","):
+                name, _, ms = part.partition(":")
+                classes[name.strip()] = float(ms)
         rep = run_online(cfg, params, qps=args.qps,
                          duration_s=args.duration,
                          raw_size=args.img + 32, group=args.group,
                          max_batch=args.max_batch,
                          max_wait_ms=args.max_wait_ms,
                          max_queue=args.max_queue, lanes=args.lanes,
-                         realloc_every=args.realloc_every)
+                         realloc_every=args.realloc_every,
+                         classes=classes, bulk_frac=args.bulk_frac,
+                         zipf=args.zipf, pool=args.pool)
         print(json.dumps(rep, indent=1))
         return
     svc = DetectionService(cfg, params, lanes=args.lanes)

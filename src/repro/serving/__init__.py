@@ -6,17 +6,24 @@ service actually lives in — requests arriving over time, queueing,
 coalescing, and tail latency:
 
 * :mod:`repro.serving.batcher` — dynamic micro-batching with
-  depth-bounded admission control;
+  depth-bounded, SLO-tiered admission control (priority classes with
+  per-class deadlines);
+* :mod:`repro.serving.cache` — content-addressed result caching:
+  exact perceptual-hash tier, near-duplicate embedding tier, and the
+  dedup-in-flight table;
 * :mod:`repro.serving.server` — :class:`DetectionServer`: per-request
   futures over a persistent service-mode lane executor, straggler
   re-execution, live lane reallocation;
 * :mod:`repro.serving.metrics` — queue depth / batch occupancy /
-  latency percentiles / throughput registry.
+  latency percentiles / throughput / cache + admission registry.
 """
 from repro.serving.batcher import (AdmissionError, BatcherConfig,
                                    MicroBatcher)
+from repro.serving.cache import (EmbeddingCache, InFlightTable,
+                                 ResultCache)
 from repro.serving.metrics import MetricsRegistry
 from repro.serving.server import DetectionServer
 
 __all__ = ["AdmissionError", "BatcherConfig", "MicroBatcher",
+           "ResultCache", "EmbeddingCache", "InFlightTable",
            "MetricsRegistry", "DetectionServer"]

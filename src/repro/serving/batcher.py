@@ -16,17 +16,31 @@ requests into ``pad_to_bucket``-shaped micro-batches under a
   already waiting, ``submit`` raises :class:`AdmissionError`
   (backpressure to the client, not host OOM) unless ``block=True``.
 
+SLO-tiered admission (``BatcherConfig.classes``): requests may carry a
+priority class, each class with its own deadline generalizing
+``max_wait_ms``.  Dict order is priority order — when a micro-batch
+forms, higher classes are popped first and lower classes only backfill
+the remaining capacity (interactive preempts bulk), while the shipping
+deadline is the earliest across class heads so no class's SLO is
+hostage to another's.  Backpressure is tiered too: classes after the
+first admit only up to ``bulk_admit_frac * max_queue`` queued images,
+so bulk traffic absorbs ``AdmissionError`` first and the interactive
+class keeps headroom.  With ``classes=None`` (default) everything runs
+as one class with ``max_wait_ms`` — bit-for-bit the legacy behavior.
+
 Bit-identity: the batcher only moves arrays around — keys travel with
 their images, padding rows repeat the last image/key and are sliced
 off after RS — so any coalescing of any arrival order produces results
 bitwise equal to ``detect_batch`` of each request alone with its key.
+Priority classes reorder *which* requests coalesce together, which the
+per-request key discipline makes result-inert.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
-from typing import Any, List, Optional, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -65,6 +79,12 @@ class BatcherConfig:
     max_wait_ms: float = 5.0  # oldest-request deadline for partial ships
     max_queue: int = 256      # queued-image admission bound
     bucket: int = 0           # pad_to_bucket granularity (0 = pow2)
+    # SLO classes: {name: max_wait_ms}, dict order = priority order
+    # (first = highest).  None = single legacy class ("default",
+    # max_wait_ms).  Non-first classes admit only up to
+    # bulk_admit_frac * max_queue queued images.
+    classes: Optional[Mapping[str, float]] = None
+    bulk_admit_frac: float = 0.5
 
 
 @dataclasses.dataclass
@@ -96,15 +116,53 @@ class MicroBatcher:
     def __init__(self, cfg: BatcherConfig = BatcherConfig()):
         if cfg.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if cfg.classes is not None and not cfg.classes:
+            raise ValueError("classes must be a non-empty mapping "
+                             "(or None for the single legacy class)")
+        if not 0.0 < cfg.bulk_admit_frac <= 1.0:
+            raise ValueError("bulk_admit_frac must be in (0, 1]")
         self.cfg = cfg
+        # priority order = dict order; single legacy class otherwise
+        if cfg.classes:
+            self.classes = list(cfg.classes)
+            self._wait_ms = {c: float(cfg.classes[c])
+                             for c in self.classes}
+        else:
+            self.classes = ["default"]
+            self._wait_ms = {"default": cfg.max_wait_ms}
+        for c, w in self._wait_ms.items():
+            if w <= 0:
+                raise ValueError(f"class {c!r} deadline must be > 0 ms")
         self._cv = threading.Condition()
-        self._q: List[_Entry] = []
-        self._depth = 0           # queued images
+        self._q: Dict[str, List[_Entry]] = {c: [] for c in self.classes}
+        self._depth = 0           # queued images, all classes
         self._closed = False
 
     # -- admission --------------------------------------------------------
+    def resolve_class(self, priority: Optional[str] = None) -> str:
+        """Map a request's priority to a configured class (None -> the
+        highest class).  Unknown names are an admission error — a
+        client bug, surfaced where every other invalid request is."""
+        if priority is None:
+            return self.classes[0]
+        if priority not in self._wait_ms:
+            raise AdmissionError(
+                f"unknown priority class {priority!r} "
+                f"(configured: {self.classes})")
+        return priority
+
+    def _admit_bound(self, cls: str) -> int:
+        """Per-class queued-image bound: the highest class gets the
+        full ``max_queue``; every lower class only
+        ``bulk_admit_frac * max_queue`` — bulk traffic hits
+        backpressure first and interactive keeps headroom."""
+        if cls == self.classes[0]:
+            return self.cfg.max_queue
+        return max(1, int(self.cfg.max_queue * self.cfg.bulk_admit_frac))
+
     def submit(self, images: np.ndarray, keys, slot,
-               *, block: bool = False, timeout: Optional[float] = None):
+               *, priority: Optional[str] = None,
+               block: bool = False, timeout: Optional[float] = None):
         """Admit one request.  Raises :class:`AdmissionError` on an
         empty/oversized request or (``block=False``) a full queue."""
         n = int(images.shape[0])
@@ -114,22 +172,26 @@ class MicroBatcher:
             raise AdmissionError(
                 f"request of {n} images exceeds max_batch="
                 f"{self.cfg.max_batch}; split it client-side")
+        cls = self.resolve_class(priority)
+        bound = self._admit_bound(cls)
         with self._cv:
             if self._closed:
                 raise AdmissionError("batcher closed")
-            if self._depth + n > self.cfg.max_queue:
+            if self._depth + n > bound:
                 if not block:
                     raise AdmissionError(
-                        f"queue full ({self._depth}/{self.cfg.max_queue} "
-                        f"images queued) — backpressure, retry later")
+                        f"queue full ({self._depth}/{bound} images "
+                        f"queued for class {cls!r}) — backpressure, "
+                        f"retry later")
                 ok = self._cv.wait_for(
                     lambda: self._closed
-                    or self._depth + n <= self.cfg.max_queue, timeout)
+                    or self._depth + n <= bound, timeout)
                 if not ok or self._closed:
                     raise AdmissionError("queue full (timed out blocking)"
                                          if not self._closed else
                                          "batcher closed")
-            self._q.append(_Entry(images, keys, slot, time.perf_counter()))
+            self._q[cls].append(
+                _Entry(images, keys, slot, time.perf_counter()))
             self._depth += n
             self._cv.notify_all()
 
@@ -137,6 +199,12 @@ class MicroBatcher:
         """Queued images (admission-control view of the backlog)."""
         with self._cv:
             return self._depth
+
+    def class_depths(self) -> Dict[str, int]:
+        """Queued images per priority class (metrics view)."""
+        with self._cv:
+            return {c: sum(e.images.shape[0] for e in q)
+                    for c, q in self._q.items()}
 
     def close(self):
         with self._cv:
@@ -148,42 +216,59 @@ class MicroBatcher:
         path, so a forced close can reject the orphaned requests
         instead of leaving their futures unresolved."""
         with self._cv:
-            take, self._q = self._q, []
+            take: List[_Entry] = []
+            for c in self.classes:
+                take.extend(self._q[c])
+                self._q[c] = []
             self._depth = 0
             self._cv.notify_all()
             return take
 
     # -- coalescing ---------------------------------------------------------
+    def _earliest_deadline(self) -> float:
+        """Min over class heads of (enqueue time + class deadline) —
+        the partial-batch ship time.  Caller holds the lock and
+        guarantees at least one queue is non-empty."""
+        return min(q[0].t_enq + self._wait_ms[c] / 1e3
+                   for c, q in self._q.items() if q)
+
     def next_batch(self, timeout: Optional[float] = None
                    ) -> Optional[MicroBatch]:
         """Block until a micro-batch is ready (or ``timeout``); returns
         None on timeout or when closed and empty.
 
-        Ships when ``max_batch`` images are queued or the oldest
-        request's ``max_wait_ms`` deadline expires — whichever first."""
+        Ships when ``max_batch`` images are queued or the earliest
+        per-class head deadline expires — whichever first.  Popping is
+        in priority order: the highest class fills first, lower classes
+        backfill remaining capacity."""
         cfg = self.cfg
         with self._cv:
-            if not self._cv.wait_for(lambda: self._q or self._closed,
-                                     timeout):
+            if not self._cv.wait_for(
+                    lambda: self._depth or self._closed, timeout):
                 return None
-            if not self._q:
+            if not self._depth:
                 return None          # closed and empty
-            deadline = self._q[0].t_enq + cfg.max_wait_ms / 1e3
             while (not self._closed and self._depth < cfg.max_batch):
-                rem = deadline - time.perf_counter()
+                # recomputed every wake: a late higher-priority arrival
+                # with a shorter deadline must be able to pull the ship
+                # time earlier
+                rem = self._earliest_deadline() - time.perf_counter()
                 if rem <= 0:
                     break
                 self._cv.wait(rem)
-                if not self._q:      # drained by close() race
+                if not self._depth:  # drained by close() race
                     return None
-            # pop whole requests up to max_batch (groups stay atomic)
+            # pop whole requests up to max_batch (groups stay atomic),
+            # priority classes first, lower classes backfilling
             take: List[_Entry] = []
             total = 0
-            while self._q and total + self._q[0].images.shape[0] \
-                    <= cfg.max_batch:
-                e = self._q.pop(0)
-                take.append(e)
-                total += e.images.shape[0]
+            for c in self.classes:
+                q = self._q[c]
+                while q and total + q[0].images.shape[0] \
+                        <= cfg.max_batch:
+                    e = q.pop(0)
+                    take.append(e)
+                    total += e.images.shape[0]
             self._depth -= total
             self._cv.notify_all()    # wake blocked submitters
         assert take, "next_batch woke with an un-poppable queue head"

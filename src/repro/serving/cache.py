@@ -1,0 +1,266 @@
+"""Content-addressed result caching for the online serving tier.
+
+At production traffic the same image reaches the detector many times —
+re-uploads, thumbnails, CDN re-encodes — and every duplicate pays the
+full ingest→decode→RS pipeline for a verdict that is deterministic per
+(image, key).  This module gives :class:`~repro.serving.DetectionServer`
+three ways to avoid that recompute:
+
+* **tier 1 — exact** (:class:`ResultCache`): a host-side perceptual
+  hash (dHash + aHash over the block-mean-resized luma plane, computed
+  in the submit path before admission) keys an LRU of full request
+  results.  Hits bypass admission, the batcher, and the executor
+  entirely.  Exactness contract: the cache key includes the request's
+  fold_in key material, and when the caller passes no key the server
+  derives one *from the content digest* — so identical pixels map to
+  identical keys and a hit is bitwise what the cold path would produce;
+* **dedup-in-flight** (:class:`InFlightTable`): concurrent identical
+  requests coalesce onto the first one's execution; the followers'
+  handles fan out from the leader's resolution (or rejection — a
+  follower is never left hanging).  Straggler/retry accounting stays
+  per-underlying-execution because followers never reach the executor;
+* **tier 2 — near-duplicate** (:class:`EmbeddingCache`): the
+  extractor's own GAP embedding (a free byproduct of the fused decode
+  kernel) keys a small LRU of settled per-image verdicts under a
+  cosine threshold.  This tier is an explicit *approximation* — a hit
+  serves a near-duplicate's verdict, not a bitwise recompute — so it
+  only short-circuits the expensive escalation path, never the
+  single-tile fast path, and the threshold defaults conservative
+  (``DetectionConfig.cache_embedding_threshold``).
+
+Everything here is plain numpy + locks: hashing must stay off the
+device (it runs before admission, on the submit thread) and the caches
+are shared across the server's pump/dispatcher/escalation threads.
+"""
+from __future__ import annotations
+
+import threading
+import zlib
+from collections import OrderedDict
+from typing import Dict, List, Optional
+
+import numpy as np
+
+# luma weights (BT.601) — the plane both perceptual hashes see
+_LUMA = np.asarray([0.299, 0.587, 0.114], np.float64)
+# perceptual-hash grid side: 8 -> 64-bit dHash + 64-bit aHash
+_PHASH_SIDE = 8
+
+
+def _resize_mean(x: np.ndarray, oh: int, ow: int) -> np.ndarray:
+    """Block-mean (area-average) resize of a 2-D plane via an integral
+    image — exact in float64, so the hash is a pure function of pixel
+    values (no interpolation-library dependence)."""
+    h, w = x.shape
+    ys = (np.arange(oh + 1) * h) // oh
+    xs = (np.arange(ow + 1) * w) // ow
+    c = np.zeros((h + 1, w + 1), np.float64)
+    np.cumsum(np.cumsum(x, axis=0), axis=1, out=c[1:, 1:])
+    out = (c[ys[1:, None], xs[None, 1:]] - c[ys[:-1, None], xs[None, 1:]]
+           - c[ys[1:, None], xs[None, :-1]]
+           + c[ys[:-1, None], xs[None, :-1]])
+    area = (ys[1:, None] - ys[:-1, None]) * (xs[1:] - xs[:-1])[None, :]
+    return out / area
+
+
+def _luma(img: np.ndarray) -> np.ndarray:
+    """(H, W, 3) raw image (uint8 or float in the 0..255 domain) ->
+    float64 luma plane.  uint8 -> float64 is exact, so a no-op
+    re-encode (uint8 -> float -> uint8) cannot move the hash."""
+    return np.asarray(img, np.float64) @ _LUMA
+
+
+def _pack_bits(bits: np.ndarray) -> int:
+    return int.from_bytes(np.packbits(bits.ravel()).tobytes(), "big")
+
+
+def dhash(img: np.ndarray, side: int = _PHASH_SIDE) -> int:
+    """Difference hash: sign of horizontal gradient on the (side,
+    side+1) block-mean luma plane -> side*side bits."""
+    p = _resize_mean(_luma(img), side, side + 1)
+    return _pack_bits(p[:, 1:] > p[:, :-1])
+
+
+def ahash(img: np.ndarray, side: int = _PHASH_SIDE) -> int:
+    """Average hash: per-cell mean vs global mean on the (side, side)
+    block-mean luma plane -> side*side bits."""
+    p = _resize_mean(_luma(img), side, side)
+    return _pack_bits(p > p.mean())
+
+
+def image_digest(img: np.ndarray) -> bytes:
+    """The tier-1 per-image content digest: shape + dHash + aHash.
+    Shape is part of the digest — two images that resize to the same
+    luma grid but differ in true resolution ingest differently."""
+    h, w = img.shape[0], img.shape[1]
+    return (h.to_bytes(4, "big") + w.to_bytes(4, "big")
+            + dhash(img).to_bytes(8, "big") + ahash(img).to_bytes(8, "big"))
+
+
+def request_digest(images: np.ndarray) -> bytes:
+    """Digest of a whole request (n images, order-sensitive — image i
+    gets per-image key fold_in(request_key, i), so order matters to
+    the result)."""
+    return b"".join(image_digest(images[i])
+                    for i in range(images.shape[0]))
+
+
+def fingerprint32(digest: bytes) -> int:
+    """Fold a digest to the 32-bit value ``fold_in`` consumes — the
+    content-derived request key is fold_in(key(seed), fingerprint)."""
+    return zlib.crc32(digest) & 0xFFFFFFFF
+
+
+def result_key(key, digest: bytes) -> bytes:
+    """The exact-tier cache key: the request's fold_in key material
+    (so explicit-key traffic caches correctly too) + the content
+    digest.  With content-derived keys the key part is redundant but
+    harmless — it keeps the invariant "same cache key => same cold
+    result" true for every caller."""
+    import jax
+    kd = np.asarray(jax.random.key_data(key), np.uint32)
+    return kd.tobytes() + digest
+
+
+def copy_result(result: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Deep-copy a result dict so cache hits / dedup fan-outs can never
+    alias a buffer another handle's owner may mutate."""
+    return {f: np.array(v, copy=True) for f, v in result.items()}
+
+
+class ResultCache:
+    """Tier 1: thread-safe LRU of full request results keyed by
+    ``result_key``.  get/put both copy — the cache owns its arrays."""
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError("cache capacity must be >= 1")
+        self.capacity = capacity
+        self._lock = threading.Lock()
+        self._d: "OrderedDict[bytes, Dict[str, np.ndarray]]" = OrderedDict()
+
+    def get(self, key: bytes) -> Optional[Dict[str, np.ndarray]]:
+        with self._lock:
+            hit = self._d.get(key)
+            if hit is None:
+                return None
+            self._d.move_to_end(key)
+            return copy_result(hit)
+
+    def put(self, key: bytes, result: Dict[str, np.ndarray]):
+        with self._lock:
+            self._d[key] = copy_result(result)
+            self._d.move_to_end(key)
+            while len(self._d) > self.capacity:
+                self._d.popitem(last=False)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._d)
+
+
+class EmbeddingCache:
+    """Tier 2: near-duplicate matching on the extractor's normalized
+    GAP embedding under a cosine threshold.
+
+    Entries are per-IMAGE settled verdicts.  A lookup normalizes the
+    probe, takes the best cosine over the (bounded) entry matrix, and
+    returns a copy of the matched rows iff cosine >= threshold.
+    Approximate by construction — callers must only use it where a
+    near-duplicate verdict is an acceptable answer (the server limits
+    it to short-circuiting escalation rounds)."""
+
+    def __init__(self, capacity: int = 512, threshold: float = 0.995):
+        if capacity < 1:
+            raise ValueError("embedding cache capacity must be >= 1")
+        if not 0.0 < threshold < 1.0 + 1e-9:
+            raise ValueError("cosine threshold must be in (0, 1]")
+        self.capacity = capacity
+        self.threshold = float(threshold)
+        self._lock = threading.Lock()
+        self._vecs: List[np.ndarray] = []     # unit-norm float64
+        self._rows: List[Dict[str, np.ndarray]] = []
+
+    @staticmethod
+    def _unit(vec: np.ndarray) -> Optional[np.ndarray]:
+        v = np.asarray(vec, np.float64).ravel()
+        n = np.linalg.norm(v)
+        if not np.isfinite(n) or n == 0.0:
+            return None
+        return v / n
+
+    def get(self, vec: np.ndarray) -> Optional[Dict[str, np.ndarray]]:
+        v = self._unit(vec)
+        if v is None:
+            return None
+        with self._lock:
+            if not self._vecs:
+                return None
+            sims = np.stack(self._vecs) @ v
+            best = int(np.argmax(sims))
+            if sims[best] < self.threshold:
+                return None
+            return copy_result(self._rows[best])
+
+    def put(self, vec: np.ndarray, rows: Dict[str, np.ndarray]):
+        v = self._unit(vec)
+        if v is None:
+            return
+        with self._lock:
+            self._vecs.append(v)
+            self._rows.append(copy_result(rows))
+            while len(self._vecs) > self.capacity:
+                self._vecs.pop(0)
+                self._rows.pop(0)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._vecs)
+
+
+class InFlightTable:
+    """Dedup-in-flight: the first submitter of a cache key is the
+    *leader* (it runs the pipeline); identical keys arriving while the
+    leader is unresolved *attach* as followers and are settled by the
+    leader's resolution/rejection fan-out.
+
+    Race discipline (all windows close to at-most-harmless):
+
+    * ``attach`` atomically either registers the caller as leader
+      (returns None) or appends its handle to the existing entry
+      (returns the leader-owned entry marker, truthy);
+    * the resolver inserts into the exact cache *before* popping the
+      entry, so a request arriving in between sees either the entry
+      (follower) or the cache (hit) — never neither;
+    * two leaders for the same key (entry popped between one's miss
+      and the other's attach) just means one harmless double-compute
+      of a deterministic result.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._waiters: Dict[bytes, List] = {}
+
+    def attach(self, key: bytes, handle) -> bool:
+        """True -> attached as follower; False -> caller is now the
+        leader for ``key`` and must eventually ``pop`` it."""
+        with self._lock:
+            w = self._waiters.get(key)
+            if w is None:
+                self._waiters[key] = []
+                return False
+            w.append(handle)
+            return True
+
+    def pop(self, key: Optional[bytes]) -> List:
+        """Remove ``key``'s entry and return its followers (empty when
+        ``key`` is None or unknown).  Exactly-once: each follower
+        handle appears in exactly one pop."""
+        if key is None:
+            return []
+        with self._lock:
+            return self._waiters.pop(key, [])
+
+    def depth(self) -> int:
+        with self._lock:
+            return sum(len(w) for w in self._waiters.values())

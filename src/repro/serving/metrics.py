@@ -9,6 +9,15 @@ depth, batch occupancy, p50/p95/p99 request latency, throughput, and
 the escalation telemetry (``images_escalated`` / ``escalation_batches``
 counters, the ``tiles_per_image`` distribution; the server derives
 ``escalation_rate`` from them in ``stats()``).
+
+Cache / admission telemetry: the server counts cache hits by tier
+(``cache_hit_exact`` / ``cache_hit_embed`` / ``cache_miss`` plus
+``dedup_coalesced`` for in-flight coalescing) and observes request
+latency both overall (``request_latency_s``) and per priority class
+(``request_latency_<class>_s`` — p50/p95 per class come out of the
+same snapshot machinery).  ``snapshot()`` derives ``rejection_rate``
+(rejected / offered) and the request-level ``cache_hit_rate`` from the
+counters so every consumer reads one definition.
 """
 from __future__ import annotations
 
@@ -84,6 +93,21 @@ class MetricsRegistry:
         imgs = out["counters"].get("images_completed", 0.0)
         out["throughput_rps"] = done / wall if wall > 0 else 0.0
         out["throughput_ips"] = imgs / wall if wall > 0 else 0.0
+        c = out["counters"]
+        # admission funnel: rejected vs everything the server accepted
+        # (admitted covers cache hits and dedup followers too — they
+        # were accepted work, just not executed)
+        rej = c.get("requests_rejected", 0.0)
+        adm = c.get("requests_admitted", 0.0)
+        out["rejection_rate"] = rej / (rej + adm) if rej + adm else 0.0
+        # cache funnel (request level): exact hits + coalesced
+        # followers avoided an execution; misses ran the pipeline.
+        # Tier-2 embedding hits are per-IMAGE escalation short-circuits
+        # and are reported as their own counter, not folded in here.
+        hits = c.get("cache_hit_exact", 0.0) + c.get("dedup_coalesced",
+                                                     0.0)
+        lookups = hits + c.get("cache_miss", 0.0)
+        out["cache_hit_rate"] = hits / lookups if lookups else 0.0
         return out
 
     def reset_clock(self):

@@ -9,11 +9,29 @@ futures the moment their micro-batch completes.
 
 Request lifecycle::
 
-    submit(images, key) ──► admission (depth bound; empty/oversized
-        rejected) ──► MicroBatcher queue ──► deadline/size-triggered
-        micro-batch ──► service-mode LaneExecutor
-        (ingest ► decode ► rs, N lanes each) ──► result scatter ──►
+    submit(images, key) ──► content cache (tier-1 exact phash hit →
+        resolve immediately; identical request in flight → coalesce
+        onto it) ──► admission (per-class depth bound; empty/oversized
+        rejected) ──► MicroBatcher class queues (priority pop, tiered
+        deadlines) ──► deadline/size-triggered micro-batch ──►
+        service-mode LaneExecutor (ingest ► decode ► rs, N lanes
+        each) ──► tier-2 embedding cache (escalation short-circuit)
+        ──► result scatter (cache fill + dedup fan-out) ──►
         RequestHandle.result()
+
+Content-addressed caching (``DetectionConfig.cache_exact`` /
+``cache_embedding_threshold``, machinery in ``serving.cache``): tier 1
+keys on an exact perceptual digest (dHash+aHash over the resized luma
+plane, host-side, pre-admission) joined with the request fold_in key;
+hits bypass admission and are **bitwise identical** to the cold path
+because content-derived default keys make identical pixels take
+identical RNG paths.  Concurrent identical requests coalesce onto one
+execution (dedup-in-flight) — straggler/retry accounting stays
+per-underlying-execution.  Tier 2 is approximate by construction
+(near-duplicate GAP embeddings, cosine-thresholded) and therefore only
+short-circuits *escalation rounds*, adopting a settled verdict for a
+near-dupe image instead of burning extra tiles — it never substitutes
+a round-0 result.
 
 Correctness anchor: results are **bit-identical** to
 ``DetectionPipeline.detect_batch`` of the same images with the same
@@ -58,6 +76,7 @@ from repro.core import allocator, lanes as lanes_lib
 from repro.core import scheduler as sched_lib
 from repro.core.detect import DetectionConfig, DetectionPipeline
 from repro.core.stages import _pad_pow2
+from repro.serving import cache as cache_lib
 from repro.serving.batcher import (AdmissionError, BatcherConfig,
                                    MicroBatcher, pad_to_bucket)
 from repro.serving.metrics import MetricsRegistry
@@ -66,11 +85,19 @@ _RESULT_FIELDS = ("message_bits", "ok", "n_corrected", "logits")
 
 
 class RequestHandle:
-    """Future for one submitted request (n images)."""
+    """Future for one submitted request (n images).
 
-    def __init__(self, rid: int, n: int):
+    ``priority`` is the admission class the batcher resolved for this
+    request (per-class latency metrics key off it).  ``_ckey`` is the
+    content-cache key when the exact tier is on — the resolver uses it
+    to populate the cache and fan results out to coalesced in-flight
+    followers."""
+
+    def __init__(self, rid: int, n: int, priority: str = "default"):
         self.rid = rid
         self.n = n
+        self.priority = priority
+        self._ckey: Optional[bytes] = None
         self.t_submit = time.perf_counter()
         self._ready = threading.Event()
         self._result: Optional[Dict[str, np.ndarray]] = None
@@ -111,11 +138,15 @@ class _SlotState:
     rounds settle, and the request's handle resolves when the last
     pending image settles."""
 
-    def __init__(self, slot, rows: Dict[str, np.ndarray], pending: int):
+    def __init__(self, slot, rows: Dict[str, np.ndarray], pending: int,
+                 embeds: Optional[np.ndarray] = None):
         self.slot = slot
         self.rows = {f: np.asarray(v).copy() for f, v in rows.items()}
         self.tiles_used = np.ones(rows["ok"].shape[0], np.int32)
         self.pending = pending
+        # round-0 GAP embeddings of this request's images — escalated
+        # verdicts are inserted into the tier-2 cache under them
+        self.embeds = embeds
 
 
 @dataclasses.dataclass
@@ -155,6 +186,24 @@ class DetectionServer:
         self.name = name
         self.metrics = MetricsRegistry()
         self.batcher = MicroBatcher(batcher or BatcherConfig())
+        # content-addressed result cache (serving.cache).  Tier 1
+        # (exact phash) + dedup-in-flight switch on together: both key
+        # off the same content digest and share the exactness contract.
+        # Tier 2 (near-duplicate GAP embedding) is independent and
+        # approximate — it only short-circuits escalation rounds.
+        if getattr(cfg, "cache_exact", False):
+            self._exact: Optional[cache_lib.ResultCache] = \
+                cache_lib.ResultCache(getattr(cfg, "cache_capacity", 256))
+            self._dedup = cache_lib.InFlightTable()
+        else:
+            self._exact = None
+            self._dedup = cache_lib.InFlightTable()  # pop(None) no-ops
+        self._embed_thr = getattr(cfg, "cache_embedding_threshold", 0.0)
+        self._embed: Optional[cache_lib.EmbeddingCache] = (
+            cache_lib.EmbeddingCache(
+                getattr(cfg, "cache_embedding_capacity", 512),
+                self._embed_thr)
+            if self._embed_thr > 0 else None)
         self.mon = sched_lib.StragglerMonitor(
             straggler_policy or sched_lib.StragglerPolicy())
         self._lanes = dict(lanes or self.pipe.default_lanes())
@@ -194,7 +243,8 @@ class DetectionServer:
         # coverage + lane concurrency) instead of looping on an rs lane
         stages = self.registry.build_stages(
             self._lanes, finish=self._finish_payload,
-            depth=2 if self.cfg.interleave else 1, escalate_inline=False)
+            depth=2 if self.cfg.interleave else 1, escalate_inline=False,
+            emit_embed=self._embed is not None)
         for st in stages:
             st.fn = self._timed(st.name, st.fn)
         self._ex = lanes_lib.LaneExecutor(stages, name=self.name).start()
@@ -240,7 +290,13 @@ class DetectionServer:
         for b in sorted(set(sizes)):
             raw = np.repeat(sample_image[None], b, axis=0)
             keys = reg.image_keys(reg.base_key, b)
-            logits = reg.decode_keyed(reg.ingest_keyed(raw, keys), keys)
+            x = reg.ingest_keyed(raw, keys)
+            if self._embed is not None:
+                # the served round-0 decode is the embed-emitting
+                # variant — warm that graph, not just the plain one
+                logits, _ = reg.decode_keyed_embed(x, keys)
+            else:
+                logits = reg.decode_keyed(x, keys)
             jax.block_until_ready(reg.rs_correct(reg.bits(logits))[0])
         if reg.policy.enabled:
             # escalation groups pow2-pad, so warm up to the next power
@@ -281,7 +337,10 @@ class DetectionServer:
         that survive the drain timeout are rejected, never left with an
         unresolved future."""
         self.batcher.close()
-        self.drain(timeout=30.0)
+        # an un-started server has no pump to finish admitted work —
+        # draining would just burn the timeout before the flush below
+        # rejects everything queued
+        self.drain(timeout=30.0 if self._threads else 0.0)
         self._stop.set()
         if self._ex is not None:
             self._ex.drain(timeout=10.0)
@@ -304,39 +363,108 @@ class DetectionServer:
                 t.join(timeout=2.0)
 
     def _finish_requests(self, slots, *, error: BaseException):
+        n = 0
         for slot in slots:
             slot._reject(error)
-        self.metrics.count("requests_failed", len(slots))
+            n += 1
+            # dedup followers coalesced onto this execution must be
+            # rejected too — exactly-once settlement, even on the
+            # close()/executor-failure paths
+            for f in self._dedup.pop(getattr(slot, "_ckey", None)):
+                f._reject(error)
+                n += 1
+        self.metrics.count("requests_failed", n)
         with self._lock:
-            self._finished += len(slots)
+            self._finished += n
 
     # -- request path ---------------------------------------------------------
+    def content_key(self, images: np.ndarray):
+        """The content-derived request fold_in key ``submit`` uses when
+        ``cache_exact`` is on and no explicit key is given — exposed so
+        offline baselines (``detect_batch`` / ``run_batch``) can
+        reproduce a served (or cached) result bit-for-bit."""
+        images = np.asarray(images)
+        if images.ndim == 3:
+            images = images[None]
+        return self.registry.content_key(
+            cache_lib.fingerprint32(cache_lib.request_digest(images)))
+
     def submit(self, images: np.ndarray, *, key=None,
-               block: bool = False) -> RequestHandle:
+               block: bool = False,
+               priority: Optional[str] = None) -> RequestHandle:
         """Admit one request (n images, one fold_in key).
 
         ``key`` defaults to the offline discipline —
         ``fold_in(key(cfg.seed), request_seq)`` — so a stream of online
         requests reproduces ``detect_batch`` called once per request on
-        a fresh pipeline.  Raises :class:`AdmissionError` on
+        a fresh pipeline.  With ``cache_exact`` on the default flips to
+        the *content-derived* key (``content_key``): identical pixels
+        get identical keys, which is what makes an exact cache hit
+        bitwise equal to the cold path (per-request sequence keys would
+        make every resubmission a distinct computation by design).
+        ``priority`` selects the batcher admission class (None = the
+        highest configured class).  Raises :class:`AdmissionError` on
         backpressure (``block=True`` waits instead)."""
         images = np.asarray(images)
         if images.ndim == 3:           # single image -> group of one
             images = images[None]
+        try:
+            cls = self.batcher.resolve_class(priority)
+        except AdmissionError:
+            self.metrics.count("requests_rejected")
+            raise
         with self._lock:
             rid = self._req_seq
             self._req_seq += 1
+        n = images.shape[0]
+        handle = RequestHandle(rid, n, priority=cls)
+        if self._exact is not None and n:
+            digest = cache_lib.request_digest(images)
+            if key is None:
+                key = self.registry.content_key(
+                    cache_lib.fingerprint32(digest))
+            ckey = cache_lib.result_key(key, digest)
+            hit = self._exact.get(ckey)
+            if hit is not None:
+                # cache hits bypass admission entirely — no queue
+                # round-trip, no depth-bound backpressure
+                self.metrics.count("cache_hit_exact")
+                self.metrics.count("requests_admitted")
+                with self._lock:
+                    self._admitted += 1
+                self._settle(handle, hit, count_tiles=False)
+                return handle
+            if self._dedup.attach(ckey, handle):
+                # follower: an identical request is already executing —
+                # coalesce onto it, the resolver fans the result out
+                self.metrics.count("dedup_coalesced")
+                self.metrics.count("requests_admitted")
+                with self._lock:
+                    self._admitted += 1
+                return handle
+            self.metrics.count("cache_miss")
+            handle._ckey = ckey
         if key is None:
             key = self.registry.batch_key(rid)
-        n = images.shape[0]
-        handle = RequestHandle(rid, n)
         # per-REQUEST image keys: coalescing can't change them, which is
         # what makes online results bit-identical to offline
         keys = self.registry.image_keys(key, n) if n else None
         try:
-            self.batcher.submit(images, keys, handle, block=block)
+            self.batcher.submit(images, keys, handle,
+                                priority=cls, block=block)
         except AdmissionError:
             self.metrics.count("requests_rejected")
+            # a leader that never dispatched must release its in-flight
+            # claim and reject any followers that raced in behind it
+            nf = 0
+            for f in self._dedup.pop(handle._ckey):
+                f._reject(AdmissionError(
+                    "coalesced leader rejected at admission"))
+                nf += 1
+            if nf:
+                self.metrics.count("requests_failed", nf)
+                with self._lock:
+                    self._finished += nf
             raise
         with self._lock:
             self._admitted += 1
@@ -394,10 +522,13 @@ class DetectionServer:
 
     def _finish_payload(self, p: dict) -> dict:
         """Stage-graph sink: device -> numpy on the rs lane."""
-        return {"message_bits": np.asarray(p["msg"]),
-                "ok": np.asarray(p["ok"]),
-                "n_corrected": np.asarray(p["ncorr"]),
-                "logits": np.asarray(p["logits"])}
+        out = {"message_bits": np.asarray(p["msg"]),
+               "ok": np.asarray(p["ok"]),
+               "n_corrected": np.asarray(p["ncorr"]),
+               "logits": np.asarray(p["logits"])}
+        if "embed" in p:         # round-0 GAP embeddings (tier-2 cache)
+            out["embed"] = np.asarray(p["embed"])
+        return out
 
     def _on_done(self, inf: _InFlight, ticket):
         """Executor callback (completion order): scatter to requests,
@@ -428,14 +559,21 @@ class DetectionServer:
         self.metrics.observe("batch_latency_s",
                              time.perf_counter() - inf.mb.t_formed)
 
-    def _resolve_request(self, slot, result: Dict[str, np.ndarray]):
+    def _settle(self, slot, result: Dict[str, np.ndarray], *,
+                count_tiles: bool = True):
+        """Resolve one handle and account for it (per-class latency,
+        completion counters).  ``count_tiles=False`` for cache hits and
+        dedup followers — they adopted a result, no tiles ran for
+        them, so they must not skew the escalation telemetry."""
         slot._resolve(result)
         n = result["message_bits"].shape[0]
         self.metrics.count("requests_completed")
         self.metrics.count("images_completed", n)
         self.metrics.observe("request_latency_s", slot.latency_s)
+        self.metrics.observe(f"request_latency_{slot.priority}_s",
+                             slot.latency_s)
         tiles = result.get("tiles_used")
-        if tiles is not None:
+        if count_tiles and tiles is not None:
             # counted at resolution (not when escalation starts), so
             # escalation_rate = images_escalated / images_completed is
             # a true fraction of COMPLETED images even while rounds are
@@ -447,23 +585,77 @@ class DetectionServer:
         with self._lock:
             self._finished += 1
 
+    def _resolve_request(self, slot, result: Dict[str, np.ndarray]):
+        """Settle an *executed* request: populate the exact cache
+        BEFORE releasing its in-flight claim (no window where a new
+        identical request sees neither), then fan the result out to
+        every coalesced follower."""
+        ckey = getattr(slot, "_ckey", None)
+        if ckey is not None:
+            if self._exact is not None:
+                self._exact.put(ckey, result)
+            followers = self._dedup.pop(ckey)
+        else:
+            followers = ()
+        self._settle(slot, result)
+        for f in followers:
+            self._settle(f, cache_lib.copy_result(result),
+                         count_tiles=False)
+
+    def _embed_tier(self, rows, need: np.ndarray, embeds: np.ndarray,
+                    off: int):
+        """Tier-2 near-duplicate cache over round-0 GAP embeddings.
+        Images about to escalate adopt a cached settled verdict when
+        their embedding clears the cosine threshold — the approximate
+        tier only short-circuits escalation rounds, never the exact
+        path.  Settled-ok images insert their verdicts for future
+        near-dupes.  Mutates ``need`` in place; returns rows (copied to
+        writable arrays if any verdict was adopted)."""
+        want = np.nonzero(need)[0]
+        adopted = np.zeros(need.shape, bool)
+        if want.size:
+            rows = {f: np.array(rows[f]) for f in _RESULT_FIELDS}
+        for i in want:
+            hit = self._embed.get(embeds[off + int(i)])
+            if hit is None:
+                continue
+            for f in _RESULT_FIELDS:
+                rows[f][i] = hit[f]
+            need[i] = False
+            adopted[i] = True
+            self.metrics.count("cache_hit_embed")
+        ok = np.asarray(rows["ok"], bool)
+        for i in np.nonzero(~need & ~adopted & ok)[0]:
+            emb = embeds[off + int(i)]
+            if self._embed.get(emb) is None:   # keep entries distinct
+                self._embed.put(
+                    emb, {f: np.asarray(rows[f][int(i)]).copy()
+                          for f in _RESULT_FIELDS})
+        return rows
+
     def _scatter_round0(self, mb, res: Dict[str, np.ndarray]):
         """Completed single-tile round: resolve settled requests, hold
         the rest in slot states and regroup their failed images into
         one escalation micro-batch."""
         policy = self.registry.policy
+        embeds = res.get("embed")
         esc: List[Tuple[_SlotState, int, int]] = []   # (state, row, gidx)
         for slot, off, n in mb.slots:
             rows = {f: res[f][off: off + n] for f in _RESULT_FIELDS}
             if not policy.enabled:
                 self._resolve_request(slot, rows)
                 continue
-            need = policy.wants_escalation(rows["ok"], rows["logits"])
+            need = np.array(policy.wants_escalation(rows["ok"],
+                                                    rows["logits"]))
+            if self._embed is not None and embeds is not None:
+                rows = self._embed_tier(rows, need, embeds, off)
             if not need.any():
                 self._resolve_request(
                     slot, {**rows, "tiles_used": np.ones(n, np.int32)})
                 continue
-            state = _SlotState(slot, rows, pending=int(need.sum()))
+            state = _SlotState(slot, rows, pending=int(need.sum()),
+                               embeds=(embeds[off: off + n].copy()
+                                       if embeds is not None else None))
             esc.extend((state, int(i), off + int(i))
                        for i in np.nonzero(need)[0])
         if esc:
@@ -492,6 +684,17 @@ class DetectionServer:
                 nxt.append(i)
                 continue
             state.pending -= 1
+            if (self._embed is not None and state.embeds is not None
+                    and bool(rows["ok"][i])):
+                # an escalation-settled verdict is exactly what the
+                # tier-2 cache is for: the expensive multi-round answer,
+                # keyed by the image's round-0 embedding so a near-dupe
+                # can skip the rounds entirely
+                emb = state.embeds[row]
+                if self._embed.get(emb) is None:
+                    self._embed.put(
+                        emb, {f: np.asarray(rows[f][i]).copy()
+                              for f in _RESULT_FIELDS})
             if state.pending == 0:
                 self._resolve_request(
                     state.slot,
@@ -542,11 +745,16 @@ class DetectionServer:
         seen: Dict[int, _SlotState] = {}
         for state, _ in targets:
             seen.setdefault(id(state), state)
+        n = 0
         for state in seen.values():
             state.slot._reject(err)
-        self.metrics.count("requests_failed", len(seen))
+            n += 1
+            for f in self._dedup.pop(getattr(state.slot, "_ckey", None)):
+                f._reject(err)
+                n += 1
+        self.metrics.count("requests_failed", n)
         with self._lock:
-            self._finished += len(seen)
+            self._finished += n
 
     # -- straggler mitigation ----------------------------------------
     def _watchdog_loop(self):
@@ -668,4 +876,9 @@ class DetectionServer:
             if done else 0.0)
         out["escalation_batches"] = int(
             self.metrics.counter("escalation_batches"))
+        # cache / dedup funnel (rates are derived in snapshot())
+        for c in ("cache_hit_exact", "cache_hit_embed", "cache_miss",
+                  "dedup_coalesced"):
+            out[c] = int(self.metrics.counter(c))
+        out["class_depths"] = self.batcher.class_depths()
         return out

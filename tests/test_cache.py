@@ -1,0 +1,427 @@
+"""Content-addressed result cache, dedup-in-flight, and SLO-tiered
+admission tests (serving.cache + the DetectionServer integration).
+
+The exactness bar: a tier-1 cache hit must be BITWISE the cold-path
+result.  That only holds because keyless requests switch to
+content-derived fold_in keys (identical pixels -> identical keys), so
+the tests cross-check served results against the offline engines
+(``detect_batch`` / sharded ``run_batch``) at the same content key —
+the RNG-key contract every engine shares.
+
+Property-based tests run when ``hypothesis`` is installed; seeded
+equivalents always run (same pattern as test_rs.py).  Server tests
+wear the deadlock canary (tests/canary.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from canary import deadline
+from repro.core import tiling
+from repro.core.detect import DetectionConfig, DetectionPipeline
+from repro.core.extractor import (encoder_forward, init_encoder,
+                                  init_extractor)
+from repro.core.rs.codec import DEFAULT_CODE, rs_encode
+from repro.data.pipeline import synth_image
+from repro.serving import (AdmissionError, BatcherConfig,
+                           DetectionServer, EmbeddingCache,
+                           InFlightTable, ResultCache)
+from repro.serving import cache as cache_lib
+
+_FIELDS = ("message_bits", "ok", "n_corrected", "logits")
+
+
+def _img(seed, h=40, w=40):
+    return np.random.default_rng(seed).integers(
+        0, 256, (h, w, 3), np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# perceptual hashing: resize, dHash/aHash, digests
+# ---------------------------------------------------------------------------
+
+
+def test_resize_mean_exact_block_means():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(0, 255, (32, 48))
+    out = cache_lib._resize_mean(x, 8, 8)
+    ref = x.reshape(8, 4, 8, 6).mean(axis=(1, 3))
+    np.testing.assert_allclose(out, ref, rtol=1e-12)
+    # non-divisible shapes still cover every pixel exactly once
+    out = cache_lib._resize_mean(x, 5, 7)
+    assert out.shape == (5, 7)
+    np.testing.assert_allclose(cache_lib._resize_mean(x, 1, 1)[0, 0],
+                               x.mean(), rtol=1e-12)
+
+
+def _check_phash_invariants(img):
+    d = cache_lib.image_digest(img)
+    # identical resubmission (fresh buffer, same pixels)
+    assert cache_lib.image_digest(np.array(img, copy=True)) == d
+    # no-op re-encode: uint8 -> float -> uint8 is exact
+    assert cache_lib.image_digest(
+        img.astype(np.float32).astype(np.uint8)) == d
+    assert cache_lib.image_digest(img.astype(np.float64)) == d
+
+
+def test_phash_invariants_seeded():
+    for seed in range(20):
+        rng = np.random.default_rng(seed)
+        _check_phash_invariants(rng.integers(
+            0, 256, (int(rng.integers(8, 80)), int(rng.integers(8, 80)),
+                     3), np.uint8))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2**32 - 1), st.integers(8, 80),
+           st.integers(8, 80))
+    def test_phash_invariants_hypothesis(seed, h, w):
+        _check_phash_invariants(
+            np.random.default_rng(seed).integers(0, 256, (h, w, 3),
+                                                 np.uint8))
+
+
+def test_request_digest_order_and_shape_sensitivity():
+    a, b = _img(1), _img(2)
+    d_ab = cache_lib.request_digest(np.stack([a, b]))
+    assert d_ab == cache_lib.request_digest(np.stack([a, b]).copy())
+    assert d_ab != cache_lib.request_digest(np.stack([b, a]))
+    # true resolution is part of the digest even at equal hash grids
+    small = _img(1, 16, 16)
+    big = np.repeat(np.repeat(small, 2, 0), 2, 1)
+    assert cache_lib.image_digest(small) != cache_lib.image_digest(big)
+
+
+def test_result_key_binds_key_material():
+    d = cache_lib.image_digest(_img(3))
+    k1 = cache_lib.result_key(jax.random.key(1), d)
+    k2 = cache_lib.result_key(jax.random.key(2), d)
+    assert k1 != k2
+    assert k1 == cache_lib.result_key(jax.random.key(1), d)
+    assert k1.endswith(d)
+
+
+# ---------------------------------------------------------------------------
+# cache primitives
+# ---------------------------------------------------------------------------
+
+
+def test_result_cache_lru_and_buffer_isolation():
+    c = ResultCache(capacity=2)
+    r = {"ok": np.array([True]), "logits": np.zeros((1, 4))}
+    c.put(b"a", r)
+    r["logits"][:] = 9.0             # caller mutates after put
+    hit = c.get(b"a")
+    assert hit["logits"].sum() == 0.0, "cache aliased caller buffer"
+    hit["logits"][:] = 5.0           # caller mutates a hit
+    assert c.get(b"a")["logits"].sum() == 0.0
+    c.put(b"b", r)
+    assert c.get(b"a") is not None   # touch a -> b is now LRU
+    c.put(b"c", r)
+    assert c.get(b"b") is None and len(c) == 2
+    assert c.get(b"a") is not None and c.get(b"c") is not None
+    with pytest.raises(ValueError):
+        ResultCache(capacity=0)
+
+
+def test_embedding_cache_threshold_and_degenerates():
+    c = EmbeddingCache(capacity=2, threshold=0.9)
+    rows = {"ok": np.array(True)}
+    c.put(np.array([2.0, 0.0]), rows)          # normalized on insert
+    assert c.get(np.array([7.0, 0.0])) is not None     # cosine 1.0
+    assert c.get(np.array([1.0, 1.0])) is None         # cos ~= 0.707
+    assert c.get(np.array([0.9, 0.1])) is not None     # above 0.9
+    assert c.get(np.zeros(2)) is None          # degenerate probe
+    c.put(np.zeros(2), rows)                   # degenerate insert: no-op
+    assert len(c) == 1
+    c.put(np.array([0.0, 1.0]), rows)
+    c.put(np.array([1.0, 1.0]), rows)          # capacity 2: oldest out
+    assert len(c) == 2 and c.get(np.array([5.0, 0.0])) is None
+    with pytest.raises(ValueError):
+        EmbeddingCache(threshold=0.0)
+
+
+def test_inflight_attach_pop_exactly_once():
+    t = InFlightTable()
+    assert t.attach(b"k", "L") is False        # leader
+    assert t.attach(b"k", "f1") is True
+    assert t.attach(b"k", "f2") is True
+    assert t.depth() == 2
+    assert t.pop(b"k") == ["f1", "f2"]
+    assert t.pop(b"k") == []                   # exactly-once
+    assert t.pop(None) == []
+    assert t.attach(b"k", "L2") is False       # key free again
+
+
+def test_config_validation():
+    params = init_extractor(jax.random.key(0), n_bits=60, channels=4,
+                            depth=1)
+    with pytest.raises(ValueError, match="threshold"):
+        DetectionPipeline(DetectionConfig(
+            tile=16, img_size=32, cache_embedding_threshold=1.5), params)
+    with pytest.raises(ValueError, match="capacit"):
+        DetectionPipeline(DetectionConfig(
+            tile=16, img_size=32, cache_capacity=0), params)
+
+
+# ---------------------------------------------------------------------------
+# DetectionServer: exact tier + dedup-in-flight
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return init_extractor(jax.random.key(0),
+                          n_bits=DEFAULT_CODE.codeword_bits,
+                          channels=8, depth=2)
+
+
+def _cfg(**kw):
+    base = dict(tile=16, img_size=32, resize_src=40, mode="qrmark",
+                rs_mode="device")
+    base.update(kw)
+    return DetectionConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def exact_srv(tiny_params):
+    srv = DetectionServer(
+        _cfg(cache_exact=True, cache_capacity=32), tiny_params,
+        batcher=BatcherConfig(max_batch=4, max_wait_ms=40.0,
+                              classes={"interactive": 40.0,
+                                       "bulk": 400.0}))
+    srv.warmup(_img(0, 48, 48))
+    srv.start()
+    yield srv
+    srv.close()
+
+
+@deadline(120)
+def test_exact_hit_bitwise_equals_cold_path_engines(exact_srv,
+                                                    tiny_params):
+    """Cold result == cache hit == detect_batch == sharded run_batch,
+    all at the shared content-derived key — the four-engine RNG
+    contract (the served cold path itself is the lane-executor
+    engine)."""
+    imgs = np.stack([_img(10, 48, 48), _img(11, 48, 48)])
+    m0 = exact_srv.metrics.counter("cache_miss")
+    h0 = exact_srv.metrics.counter("cache_hit_exact")
+    cold = exact_srv.submit(imgs).result(60)
+    hit = exact_srv.submit(np.array(imgs, copy=True)).result(60)
+    assert exact_srv.metrics.counter("cache_miss") == m0 + 1
+    assert exact_srv.metrics.counter("cache_hit_exact") == h0 + 1
+    ckey = exact_srv.content_key(imgs)
+    pipe = DetectionPipeline(_cfg(), tiny_params)
+    offline = pipe.detect_batch(imgs, key=ckey)
+    sharded = pipe.run_batch(imgs, key=ckey)
+    pipe.close()
+    for f in _FIELDS:
+        np.testing.assert_array_equal(np.asarray(cold[f]),
+                                      np.asarray(hit[f]), err_msg=f)
+        np.testing.assert_array_equal(np.asarray(cold[f]),
+                                      np.asarray(offline[f]), err_msg=f)
+        np.testing.assert_array_equal(np.asarray(cold[f]),
+                                      np.asarray(sharded[f]), err_msg=f)
+
+
+@deadline(120)
+def test_explicit_key_traffic_caches_too(exact_srv):
+    imgs = _img(20, 48, 48)[None]
+    key = jax.random.key(77)
+    h0 = exact_srv.metrics.counter("cache_hit_exact")
+    r1 = exact_srv.submit(imgs, key=key).result(60)
+    r2 = exact_srv.submit(imgs, key=key).result(60)
+    assert exact_srv.metrics.counter("cache_hit_exact") == h0 + 1
+    for f in _FIELDS:
+        np.testing.assert_array_equal(r1[f], r2[f], err_msg=f)
+    # a different key is a different computation: no false hit
+    h1 = exact_srv.metrics.counter("cache_hit_exact")
+    exact_srv.submit(imgs, key=jax.random.key(78)).result(60)
+    assert exact_srv.metrics.counter("cache_hit_exact") == h1
+
+
+@deadline(120)
+def test_dedup_in_flight_resolves_every_follower_once(exact_srv):
+    """Concurrent identical requests coalesce onto one execution and
+    every coalesced handle resolves exactly once (the 40ms batching
+    deadline holds the leader queued while followers attach)."""
+    imgs = np.stack([_img(30, 48, 48)])
+    d0 = exact_srv.metrics.counter("dedup_coalesced")
+    c0 = exact_srv.metrics.counter("requests_completed")
+    handles = [exact_srv.submit(np.array(imgs, copy=True))
+               for _ in range(3)]
+    results = [h.result(60) for h in handles]
+    assert all(h.done() for h in handles)
+    assert exact_srv.metrics.counter("dedup_coalesced") == d0 + 2
+    assert exact_srv.metrics.counter("requests_completed") == c0 + 3
+    for f in _FIELDS:
+        for r in results[1:]:
+            np.testing.assert_array_equal(results[0][f], r[f],
+                                          err_msg=f)
+    assert exact_srv._dedup.depth() == 0
+
+
+@deadline(120)
+def test_priority_classes_and_rejected_accounting(exact_srv):
+    """Unknown classes are AdmissionErrors counted as rejections (not
+    failures), per-class latency distributions appear, and the
+    registry derives rejection_rate."""
+    with pytest.raises(AdmissionError, match="unknown priority"):
+        exact_srv.submit(_img(40)[None], priority="nope")
+    r0 = exact_srv.metrics.counter("requests_rejected")
+    f0 = exact_srv.metrics.counter("requests_failed")
+    exact_srv.submit(_img(41, 48, 48)[None],
+                     priority="bulk").result(60)
+    with pytest.raises(AdmissionError):
+        exact_srv.submit(_img(42)[None], priority="also-nope")
+    st = exact_srv.stats()
+    assert st["counters"]["requests_rejected"] >= r0 + 1
+    assert st["counters"].get("requests_failed", 0.0) == f0
+    assert "request_latency_bulk_s" in st
+    assert "request_latency_interactive_s" in st
+    assert 0.0 < st["rejection_rate"] < 1.0
+    c = st["counters"]
+    hits = c.get("cache_hit_exact", 0) + c.get("dedup_coalesced", 0)
+    lookups = hits + c.get("cache_miss", 0)
+    assert st["cache_hit_rate"] == pytest.approx(
+        hits / lookups if lookups else 0.0)
+
+
+@deadline(60)
+def test_close_rejects_coalesced_followers(tiny_params):
+    """Exactly-once under executor close(): an un-started server's
+    queued leader AND its coalesced followers are all rejected — no
+    handle is ever left unresolved."""
+    srv = DetectionServer(
+        _cfg(cache_exact=True), tiny_params,
+        batcher=BatcherConfig(max_batch=4, max_wait_ms=5000.0))
+    imgs = _img(50)[None]
+    leader = srv.submit(imgs)
+    follower = srv.submit(np.array(imgs, copy=True))
+    assert srv.metrics.counter("dedup_coalesced") == 1
+    srv.close()
+    for h in (leader, follower):
+        with pytest.raises(RuntimeError, match="closed"):
+            h.result(1)
+    assert srv.metrics.counter("requests_failed") == 2
+    assert srv._finished == srv._admitted
+
+
+# ---------------------------------------------------------------------------
+# tier 2: near-duplicate embedding cache on the margined workload
+# ---------------------------------------------------------------------------
+
+TILE, IMG, B = 16, 48, 2
+
+
+@pytest.fixture(scope="module")
+def workload():
+    """Two watermark payloads on the corr-margined detector (the fig12
+    workload): tied pattern bank, zeroed conv head, so embeddings and
+    logits carry real watermark structure without trained artifacts."""
+    code = DEFAULT_CODE
+    enc = init_encoder(jax.random.key(1), n_bits=code.codeword_bits,
+                       channels=8, depth=2, tile=TILE)
+    dec = init_extractor(jax.random.key(2), n_bits=code.codeword_bits,
+                         channels=8, depth=2, tile=TILE,
+                         patterns=enc["patterns"])
+    dec["head"]["w"] = dec["head"]["w"] * 0.0   # corr path only
+    rng = np.random.default_rng(0)
+
+    def embed(msg, seeds):
+        cw = jnp.asarray(rs_encode(code, msg))
+        imgs = jnp.asarray(np.stack([synth_image(s, IMG) for s in seeds]),
+                           jnp.float32) / 127.5 - 1.0
+        flat = tiling.grid_partition(imgs, TILE).reshape(-1, TILE, TILE, 3)
+        xw, _ = encoder_forward(
+            enc, flat, jnp.broadcast_to(cw, (flat.shape[0],
+                                             code.codeword_bits)),
+            embed_rms=0.2)
+        g = IMG // TILE
+        xw = xw.reshape(len(seeds), g, g, TILE, TILE, 3).transpose(
+            0, 1, 3, 2, 4, 5).reshape(len(seeds), IMG, IMG, 3)
+        return np.asarray((xw + 1.0) * 127.5, np.float32)
+
+    msg_a = rng.integers(0, 2, code.message_bits)
+    msg_b = 1 - msg_a
+    return {"dec": dec,
+            "raw_a": embed(msg_a, range(B)),
+            "raw_b": embed(msg_b, range(100, 100 + B))}
+
+
+def _wcfg(**kw):
+    base = dict(tile=TILE, img_size=IMG, resize_src=IMG, mode="qrmark",
+                rs_mode="device", code=DEFAULT_CODE)
+    base.update(kw)
+    return DetectionConfig(**base)
+
+
+def test_embed_emission_is_logit_inert_and_payloads_separate(workload):
+    """decode_keyed_embed returns bitwise the decode_keyed logits plus
+    a GAP embedding; across different watermark payloads those
+    embeddings NEVER clear the tier-2 cosine threshold (the near-dup
+    tier cannot leak one payload's verdict to another), while the same
+    pixels reproduce cosine 1.0."""
+    w = workload
+    pipe = DetectionPipeline(_wcfg(), w["dec"])
+    reg = pipe.stages
+    key = jax.random.key(3)
+    keys = reg.image_keys(key, B)
+    cache = EmbeddingCache(capacity=16, threshold=0.995)
+    embeds = {}
+    for name in ("raw_a", "raw_b"):
+        x = reg.ingest_keyed(w[name], keys)
+        logits, emb = reg.decode_keyed_embed(x, keys)
+        np.testing.assert_array_equal(
+            np.asarray(logits), np.asarray(reg.decode_keyed(x, keys)),
+            err_msg="embed emission changed the logits")
+        embeds[name] = np.asarray(emb)
+    pipe.close()
+    for i in range(B):
+        cache.put(embeds["raw_a"][i], {"ok": np.array(True), "i": i})
+    for i in range(B):          # cross-payload: never fires
+        assert cache.get(embeds["raw_b"][i]) is None, \
+            "near-dup tier matched across watermark payloads"
+    for i in range(B):          # same pixels: always fires
+        assert cache.get(embeds["raw_a"][i].copy()) is not None
+
+
+@deadline(900)
+def test_server_embed_tier_short_circuits_escalation(workload):
+    """Full server path: a thin-margin request escalates and settles;
+    resubmitting the same pixels (same explicit key, exact tier OFF)
+    hits the embedding tier at round 0 and adopts the settled verdict
+    without burning new escalation rounds."""
+    w = workload
+    srv = DetectionServer(
+        _wcfg(escalate_tiles=2, escalate_margin=50.0,
+              cache_embedding_threshold=0.995), w["dec"],
+        batcher=BatcherConfig(max_batch=B, max_wait_ms=5.0),
+        watchdog_interval_s=10.0)
+    srv.warmup(w["raw_a"][0])
+    srv.start()
+    try:
+        key = jax.random.key(5)
+        r1 = srv.submit(w["raw_a"], key=key).result(300)
+        assert (r1["tiles_used"] > 1).all(), \
+            "margin trigger did not escalate"
+        assert r1["ok"].all()
+        e0 = srv.metrics.counter("escalation_batches")
+        r2 = srv.submit(np.array(w["raw_a"], copy=True),
+                        key=key).result(300)
+        assert srv.metrics.counter("cache_hit_embed") == B
+        assert srv.metrics.counter("escalation_batches") == e0, \
+            "embed hit should skip escalation entirely"
+        assert (r2["tiles_used"] == 1).all()
+        for f in _FIELDS:
+            np.testing.assert_array_equal(r1[f], r2[f], err_msg=f)
+    finally:
+        srv.close()
