@@ -10,8 +10,8 @@ compares two arms that see the *same* arrival and workload sequence:
 
 * ``nocache`` — SLO-tiered admission only (the fig11 runtime plus
   priority classes);
-* ``cache`` — tier-1 exact perceptual-hash result cache + dedup-in-
-  flight on top (``DetectionConfig.cache_exact``).
+* ``cache`` — tier-1 exact content-hash (sha256) result cache +
+  dedup-in-flight on top (``DetectionConfig.cache_exact``).
 
 The claim: at the measured hit rate (>= 50% at s=1.1) the cache arm's
 mean request latency is strictly lower and the interactive class's

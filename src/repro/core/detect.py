@@ -123,11 +123,11 @@ class DetectionConfig:
 
     Cache knobs (consumed by the online ``serving.DetectionServer``;
     offline engines ignore them): ``cache_exact`` enables the tier-1
-    perceptual-hash result cache plus dedup-in-flight — and switches
-    keyless requests to *content-derived* keys
-    (``fold_in(key(seed), phash fingerprint)``), so identical pixels
-    produce identical keys and a cache hit is bitwise what the cold
-    path would compute.  ``cache_embedding_threshold`` > 0 enables the
+    content-hash (sha256) result cache plus dedup-in-flight — and
+    switches keyless requests to *content-derived* keys
+    (``fold_in(key(seed), fingerprint32(sha256 digest))``), so
+    identical pixels produce identical keys and a cache hit is bitwise
+    what the cold path would compute.  ``cache_embedding_threshold`` > 0 enables the
     tier-2 near-duplicate cache over the extractor's GAP embedding
     (approximate by design; it only short-circuits escalation
     rounds)."""
@@ -150,7 +150,7 @@ class DetectionConfig:
     escalate_tiles: int = 1        # max tiles/image (1 = no escalation)
     escalate_margin: float = 0.0   # mean-|logit| floor (0 = RS-only)
     # -- online result cache (serving.cache; offline engines ignore) --
-    cache_exact: bool = False      # tier-1 exact phash cache + dedup
+    cache_exact: bool = False      # tier-1 exact sha256 cache + dedup
     cache_embedding_threshold: float = 0.0  # tier-2 cosine floor (0=off)
     cache_capacity: int = 256      # tier-1 LRU entries (requests)
     cache_embedding_capacity: int = 512  # tier-2 LRU entries (images)

@@ -9,7 +9,7 @@ coalescing, and tail latency:
   depth-bounded, SLO-tiered admission control (priority classes with
   per-class deadlines);
 * :mod:`repro.serving.cache` — content-addressed result caching:
-  exact perceptual-hash tier, near-duplicate embedding tier, and the
+  exact sha256 tier, near-duplicate embedding tier, and the
   dedup-in-flight table;
 * :mod:`repro.serving.server` — :class:`DetectionServer`: per-request
   futures over a persistent service-mode lane executor, straggler

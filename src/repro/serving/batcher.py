@@ -22,7 +22,14 @@ priority class, each class with its own deadline generalizing
 forms, higher classes are popped first and lower classes only backfill
 the remaining capacity (interactive preempts bulk), while the shipping
 deadline is the earliest across class heads so no class's SLO is
-hostage to another's.  Backpressure is tiered too: classes after the
+hostage to another's.  Aging closes the starvation hole priority
+popping would otherwise open: an entry whose deadline has already
+expired is promoted to the head of the pop order (earliest expired
+deadline first, ahead of fresh higher-class traffic), so even when
+interactive load alone fills ``max_batch`` every cycle, a bulk entry
+waits at most ~its deadline before it is *included* in a batch — the
+deadline bounds inclusion, not just ship timing.  Backpressure is
+tiered too: classes after the
 first admit only up to ``bulk_admit_frac * max_queue`` queued images,
 so bulk traffic absorbs ``AdmissionError`` first and the interactive
 class keeps headroom.  With ``classes=None`` (default) everything runs
@@ -239,8 +246,12 @@ class MicroBatcher:
 
         Ships when ``max_batch`` images are queued or the earliest
         per-class head deadline expires — whichever first.  Popping is
-        in priority order: the highest class fills first, lower classes
-        backfill remaining capacity."""
+        in priority order — the highest class fills first, lower
+        classes backfill remaining capacity — EXCEPT that entries whose
+        deadline has already expired are promoted ahead of everything
+        (earliest expired deadline first), so sustained high-class
+        traffic can delay a lower class only up to its deadline, never
+        starve it out of batches entirely."""
         cfg = self.cfg
         with self._cv:
             if not self._cv.wait_for(
@@ -258,17 +269,32 @@ class MicroBatcher:
                 self._cv.wait(rem)
                 if not self._depth:  # drained by close() race
                     return None
-            # pop whole requests up to max_batch (groups stay atomic),
-            # priority classes first, lower classes backfilling
+            # pop whole requests up to max_batch (groups stay atomic):
+            # heads whose deadline already expired go first (earliest
+            # expired deadline wins, regardless of class — the aging
+            # rule that keeps bulk from starving under an interactive
+            # flood), then priority order, lower classes backfilling
             take: List[_Entry] = []
             total = 0
-            for c in self.classes:
-                q = self._q[c]
-                while q and total + q[0].images.shape[0] \
-                        <= cfg.max_batch:
-                    e = q.pop(0)
-                    take.append(e)
-                    total += e.images.shape[0]
+            now = time.perf_counter()
+            while True:
+                best = None       # (sort key, class)
+                for i, c in enumerate(self.classes):
+                    q = self._q[c]
+                    if not q or total + q[0].images.shape[0] \
+                            > cfg.max_batch:
+                        continue
+                    dl = q[0].t_enq + self._wait_ms[c] / 1e3
+                    # expired heads (0, deadline, ...) sort before all
+                    # fresh heads (1, priority, ...)
+                    k = (0, dl, i) if dl <= now else (1, i, 0.0)
+                    if best is None or k < best[0]:
+                        best = (k, c)
+                if best is None:
+                    break
+                e = self._q[best[1]].pop(0)
+                take.append(e)
+                total += e.images.shape[0]
             self._depth -= total
             self._cv.notify_all()    # wake blocked submitters
         assert take, "next_batch woke with an un-poppable queue head"

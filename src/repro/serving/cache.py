@@ -6,11 +6,14 @@ full ingest→decode→RS pipeline for a verdict that is deterministic per
 (image, key).  This module gives :class:`~repro.serving.DetectionServer`
 three ways to avoid that recompute:
 
-* **tier 1 — exact** (:class:`ResultCache`): a host-side perceptual
-  hash (dHash + aHash over the block-mean-resized luma plane, computed
-  in the submit path before admission) keys an LRU of full request
-  results.  Hits bypass admission, the batcher, and the executor
-  entirely.  Exactness contract: the cache key includes the request's
+* **tier 1 — exact** (:class:`ResultCache`): a host-side
+  *cryptographic* content digest (sha256 over the image shape and the
+  canonical float64 pixel bytes, computed in the submit path before
+  admission) keys an LRU of full request results.  Hits bypass
+  admission, the batcher, and the executor entirely.  Exactness
+  contract: the digest binds every pixel value bit-for-bit (distinct
+  images cannot collide — a perceptual hash would violate this for
+  e.g. flat/low-texture images), the cache key includes the request's
   fold_in key material, and when the caller passes no key the server
   derives one *from the content digest* — so identical pixels map to
   identical keys and a hit is bitwise what the cold path would produce;
@@ -23,10 +26,18 @@ three ways to avoid that recompute:
   extractor's own GAP embedding (a free byproduct of the fused decode
   kernel) keys a small LRU of settled per-image verdicts under a
   cosine threshold.  This tier is an explicit *approximation* — a hit
-  serves a near-duplicate's verdict, not a bitwise recompute — so it
-  only short-circuits the expensive escalation path, never the
-  single-tile fast path, and the threshold defaults conservative
+  substitutes the near-duplicate's FULL cached payload (message_bits,
+  ok, n_corrected, logits; the probe image's own round-0 decode is
+  discarded for that image), not a bitwise recompute — so it only
+  short-circuits the expensive escalation path, never the single-tile
+  fast path, and the threshold defaults conservative
   (``DetectionConfig.cache_embedding_threshold``).
+
+The perceptual hashes (:func:`dhash` / :func:`ahash`) are retained as
+*approximate* similarity utilities only — they are deliberately lossy
+(64 bits from block means) and MUST NOT key any tier that promises
+exactness; the exact tier and the in-flight table key on
+:func:`image_digest`'s sha256.
 
 Everything here is plain numpy + locks: hashing must stay off the
 device (it runs before admission, on the submit thread) and the caches
@@ -34,6 +45,7 @@ are shared across the server's pump/dispatcher/escalation threads.
 """
 from __future__ import annotations
 
+import hashlib
 import threading
 import zlib
 from collections import OrderedDict
@@ -50,8 +62,12 @@ _PHASH_SIDE = 8
 def _resize_mean(x: np.ndarray, oh: int, ow: int) -> np.ndarray:
     """Block-mean (area-average) resize of a 2-D plane via an integral
     image — exact in float64, so the hash is a pure function of pixel
-    values (no interpolation-library dependence)."""
+    values (no interpolation-library dependence).  The output grid is
+    clamped to the input shape: an image smaller than the requested
+    grid yields fewer cells rather than zero-area blocks (which would
+    divide by zero and poison the hash bits with NaN)."""
     h, w = x.shape
+    oh, ow = min(oh, h), min(ow, w)
     ys = (np.arange(oh + 1) * h) // oh
     xs = (np.arange(ow + 1) * w) // ow
     c = np.zeros((h + 1, w + 1), np.float64)
@@ -76,25 +92,34 @@ def _pack_bits(bits: np.ndarray) -> int:
 
 def dhash(img: np.ndarray, side: int = _PHASH_SIDE) -> int:
     """Difference hash: sign of horizontal gradient on the (side,
-    side+1) block-mean luma plane -> side*side bits."""
+    side+1) block-mean luma plane -> up to side*side bits (fewer for
+    images smaller than the grid).  APPROXIMATE — similarity utility
+    only, never an exactness key."""
     p = _resize_mean(_luma(img), side, side + 1)
     return _pack_bits(p[:, 1:] > p[:, :-1])
 
 
 def ahash(img: np.ndarray, side: int = _PHASH_SIDE) -> int:
     """Average hash: per-cell mean vs global mean on the (side, side)
-    block-mean luma plane -> side*side bits."""
+    block-mean luma plane -> up to side*side bits.  APPROXIMATE —
+    similarity utility only, never an exactness key."""
     p = _resize_mean(_luma(img), side, side)
     return _pack_bits(p > p.mean())
 
 
 def image_digest(img: np.ndarray) -> bytes:
-    """The tier-1 per-image content digest: shape + dHash + aHash.
-    Shape is part of the digest — two images that resize to the same
-    luma grid but differ in true resolution ingest differently."""
-    h, w = img.shape[0], img.shape[1]
-    return (h.to_bytes(4, "big") + w.to_bytes(4, "big")
-            + dhash(img).to_bytes(8, "big") + ahash(img).to_bytes(8, "big"))
+    """The tier-1 per-image content digest: sha256 over shape + the
+    canonical float64 pixel bytes.  Cryptographic — distinct images
+    cannot collide, which the exact tier's "bitwise identical to the
+    cold path" contract requires (a perceptual hash collides on e.g.
+    flat/low-texture images).  Canonicalizing through float64 keeps
+    the digest invariant under no-op re-encodes (uint8 -> float ->
+    uint8 is exact in float64), matching what the ingest stage sees."""
+    a = np.ascontiguousarray(np.asarray(img, np.float64))
+    h = hashlib.sha256()
+    h.update(np.asarray(a.shape, np.int64).tobytes())
+    h.update(a.tobytes())
+    return h.digest()
 
 
 def request_digest(images: np.ndarray) -> bytes:

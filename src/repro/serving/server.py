@@ -9,7 +9,7 @@ futures the moment their micro-batch completes.
 
 Request lifecycle::
 
-    submit(images, key) ──► content cache (tier-1 exact phash hit →
+    submit(images, key) ──► content cache (tier-1 exact sha256 hit →
         resolve immediately; identical request in flight → coalesce
         onto it) ──► admission (per-class depth bound; empty/oversized
         rejected) ──► MicroBatcher class queues (priority pop, tiered
@@ -21,17 +21,21 @@ Request lifecycle::
 
 Content-addressed caching (``DetectionConfig.cache_exact`` /
 ``cache_embedding_threshold``, machinery in ``serving.cache``): tier 1
-keys on an exact perceptual digest (dHash+aHash over the resized luma
-plane, host-side, pre-admission) joined with the request fold_in key;
-hits bypass admission and are **bitwise identical** to the cold path
-because content-derived default keys make identical pixels take
-identical RNG paths.  Concurrent identical requests coalesce onto one
-execution (dedup-in-flight) — straggler/retry accounting stays
-per-underlying-execution.  Tier 2 is approximate by construction
-(near-duplicate GAP embeddings, cosine-thresholded) and therefore only
-short-circuits *escalation rounds*, adopting a settled verdict for a
-near-dupe image instead of burning extra tiles — it never substitutes
-a round-0 result.
+keys on a cryptographic content digest (sha256 over shape + canonical
+pixel bytes, host-side, pre-admission — collision-free, so a hit can
+only ever serve the same image's result) joined with the request
+fold_in key; hits bypass admission and are **bitwise identical** to
+the cold path because content-derived default keys make identical
+pixels take identical RNG paths.  Concurrent identical requests
+coalesce onto one execution (dedup-in-flight) — straggler/retry
+accounting stays per-underlying-execution.  Tier 2 is approximate by
+construction (near-duplicate GAP embeddings, cosine-thresholded) and
+only fires for images *headed into escalation*: a hit substitutes the
+near-duplicate's FULL cached payload (message_bits, ok, n_corrected,
+logits — the image's own round-0 decode is discarded) in place of
+running the escalation rounds.  The round-0 decode itself always
+executes (it produces the probe embedding), and images that settle at
+round 0 are never touched by this tier.
 
 Correctness anchor: results are **bit-identical** to
 ``DetectionPipeline.detect_batch`` of the same images with the same
@@ -187,7 +191,7 @@ class DetectionServer:
         self.metrics = MetricsRegistry()
         self.batcher = MicroBatcher(batcher or BatcherConfig())
         # content-addressed result cache (serving.cache).  Tier 1
-        # (exact phash) + dedup-in-flight switch on together: both key
+        # (exact sha256) + dedup-in-flight switch on together: both key
         # off the same content digest and share the exactness contract.
         # Tier 2 (near-duplicate GAP embedding) is independent and
         # approximate — it only short-circuits escalation rounds.
@@ -608,9 +612,15 @@ class DetectionServer:
         Images about to escalate adopt a cached settled verdict when
         their embedding clears the cosine threshold — the approximate
         tier only short-circuits escalation rounds, never the exact
-        path.  Settled-ok images insert their verdicts for future
-        near-dupes.  Mutates ``need`` in place; returns rows (copied to
-        writable arrays if any verdict was adopted)."""
+        path.  Adoption is WHOLESALE: every result field
+        (message_bits, ok, n_corrected, logits) is replaced by the
+        cached near-duplicate's payload and the image's own round-0
+        decode is discarded — the deliberate semantics of an
+        approximate tier (mixing the probe's failed bits with a
+        borrowed ok verdict would produce incoherent rows).
+        Settled-ok images insert their verdicts for future near-dupes.
+        Mutates ``need`` in place; returns rows (copied to writable
+        arrays if any verdict was adopted)."""
         want = np.nonzero(need)[0]
         adopted = np.zeros(need.shape, bool)
         if want.size:

@@ -205,6 +205,44 @@ def test_batcher_request_groups_stay_atomic():
 
 
 @deadline(30)
+def test_batcher_expired_deadline_promotes_starved_class():
+    """Aging regression: interactive traffic alone fills max_batch
+    every cycle, but a bulk entry whose deadline has expired must be
+    PROMOTED into the next batch (head of the pop order), not merely
+    trigger shipping while never being included."""
+    mb = MicroBatcher(BatcherConfig(
+        max_batch=2, max_wait_ms=5.0,
+        classes={"interactive": 10_000.0, "bulk": 10.0}))
+    mb.submit(_imgs(1, seed=9), _keys(1), slot="bulk0", priority="bulk")
+    time.sleep(0.03)                    # bulk deadline (10ms) expires
+    for i in range(4):                  # enough to fill 2 full batches
+        mb.submit(_imgs(1, seed=i), _keys(1), slot=f"i{i}",
+                  priority="interactive")
+    out = mb.next_batch(timeout=5.0)
+    assert out.slots[0][0] == "bulk0", \
+        "expired bulk entry was not promoted ahead of interactive"
+    assert [s[0] for s in out.slots] == ["bulk0", "i0"]
+    # fresh traffic still pops in priority order afterwards
+    assert [s[0] for s in mb.next_batch(timeout=5.0).slots] \
+        == ["i1", "i2"]
+
+
+@deadline(30)
+def test_batcher_priority_order_without_expiry():
+    """With no expired deadlines, priority popping is unchanged:
+    interactive preempts an earlier-queued (but unexpired) bulk entry,
+    and bulk backfills remaining capacity."""
+    mb = MicroBatcher(BatcherConfig(
+        max_batch=4, max_wait_ms=5.0,
+        classes={"interactive": 10_000.0, "bulk": 10_000.0}))
+    mb.submit(_imgs(2, seed=9), _keys(2), slot="bulk0", priority="bulk")
+    mb.submit(_imgs(2, seed=1), _keys(2), slot="i0",
+              priority="interactive")
+    out = mb.next_batch(timeout=5.0)
+    assert [s[0] for s in out.slots] == ["i0", "bulk0"]
+
+
+@deadline(30)
 def test_batcher_admission_backpressure_under_slow_consumer():
     """Nobody drains the queue: admission must reject at the depth
     bound (backpressure, not OOM) and resume once space frees."""
