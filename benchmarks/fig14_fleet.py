@@ -1,0 +1,176 @@
+"""Fig. 14 (repo-native): multi-replica fleet scaling and chaos.
+
+One DetectionServer saturates one device; scaling a provenance service
+means a fleet of replicas behind a router.  This figure drives the
+:class:`~repro.serving.FleetRouter` (rendezvous content-digest routing,
+spill-over on backpressure, crash re-execution) with the fig11 open-loop
+Poisson generator and answers two questions:
+
+* **scaling** — aggregate sustained qps vs replica count, where
+  "sustained" is the highest offered qps whose p95 stays inside the
+  30 ms interactive budget (fig11's ``LATENCY_BUDGET_MS``) with zero
+  admission rejections.  Sustained qps must be monotonically
+  non-decreasing 1 -> 2 -> 4 replicas;
+* **chaos** — the kill-one-replica arm: a :class:`FaultPlan` crashes a
+  replica mid-run with requests in flight.  Every offered request must
+  still complete (``reroutes > 0``, ``unresolved == 0``, zero failed)
+  via sibling re-execution.
+
+The fleet runs in a **subprocess** with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the
+``tests/sharded_check.py`` CI-scale simulation: one forced CPU device
+per replica, pinned via ``jax.default_device``) — the flag only takes
+effect before jax initialises, and the parent harness has usually
+already imported jax.  The child writes
+``experiments/bench/BENCH_fleet.json``; the parent re-reads it and
+emits the CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from benchmarks import common
+
+LATENCY_BUDGET_MS = 30.0  # fig11's interactive budget, reused verbatim
+FORCED_DEVICES = 4
+
+
+def _sustained(rows, n_replicas):
+    """Max offered qps with p95 <= budget and rejected == 0, else 0."""
+    ok = [r["qps_offered"] for r in rows
+          if r["replicas"] == n_replicas and r["rejected"] == 0
+          and r["latency_ms"]["p95"] <= LATENCY_BUDGET_MS]
+    return max(ok) if ok else 0.0
+
+
+def child_main(quick: bool = False):
+    """Runs inside the forced-4-device subprocess."""
+    import jax
+    from repro.core.detect import DetectionConfig
+    from repro.core.extractor import init_extractor
+    from repro.core.rs.codec import DEFAULT_CODE
+    from repro.launch.serve import run_fleet
+    from repro.serving import FaultPlan
+
+    img, tile = 32, 16           # smoke config: scaling shape, not size
+    raw = img + 32
+    counts = (1, 2) if quick else (1, 2, 4)
+    qps_points = (8.0, 16.0) if quick else (8.0, 16.0, 24.0)
+    duration = 1.5 if quick else 3.0
+    cfg = DetectionConfig(tile=tile, img_size=img, resize_src=img + 8,
+                          mode="qrmark", rs_mode="device",
+                          code=DEFAULT_CODE)
+    params = init_extractor(jax.random.key(0),
+                            n_bits=DEFAULT_CODE.codeword_bits,
+                            channels=8, depth=2)
+
+    rows = []
+    for n in counts:
+        for qps in qps_points:
+            rep = run_fleet(cfg, params, replicas=n, qps=qps,
+                            duration_s=duration, raw_size=raw,
+                            max_batch=8, max_wait_ms=5.0,
+                            max_queue=256, seed=0, quiet=True)
+            rows.append(rep)
+            print(f"# fig14 r{n}@{qps}qps: p95="
+                  f"{rep['latency_ms']['p95']}ms rej={rep['rejected']} "
+                  f"unresolved={rep['unresolved']}", flush=True)
+
+    # chaos arm: crash one of two replicas after it admits its 3rd
+    # request — in-flight work must re-execute on the sibling
+    chaos = run_fleet(cfg, params, replicas=2, qps=qps_points[-1],
+                      duration_s=duration, raw_size=raw,
+                      max_batch=8, max_wait_ms=50.0, max_queue=256,
+                      seed=1, quiet=True,
+                      fault_plans={"r0": FaultPlan(crash_after_admit=2)})
+    admitted = chaos["offered"] - chaos["rejected"]
+    chaos_summary = {
+        "scenario": "kill_replica_mid_run",
+        "offered": chaos["offered"],
+        "rejected": chaos["rejected"],
+        "admitted": admitted,
+        "completed": chaos["completed"],
+        "unresolved": chaos["unresolved"],
+        "failed": chaos["failed"],
+        "all_admitted_completed": (chaos["completed"] == admitted
+                                   and chaos["unresolved"] == 0
+                                   and chaos["failed"] == 0),
+        "kill_observed": chaos["unhealthy"] >= 1,
+        "p95_ms": chaos["latency_ms"]["p95"],
+        "spillovers": chaos["spillovers"],
+        "reroutes": chaos["reroutes"],
+        "unhealthy": chaos["unhealthy"],
+        "straggler_retries": chaos["straggler_retries"],
+        "faults_fired": chaos["faults_injected"] + chaos["unhealthy"],
+    }
+
+    sustained = {str(n): _sustained(rows, n) for n in counts}
+    vals = [sustained[str(n)] for n in counts]
+    summary = {
+        "latency_budget_ms": LATENCY_BUDGET_MS,
+        "sustained_qps": sustained,
+        "monotonic_1_to_4": all(b >= a for a, b in zip(vals, vals[1:])),
+        "chaos": chaos_summary,
+        "environment": {
+            "cpu_count": os.cpu_count(),
+            "jax_device_count": jax.device_count(),
+            "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        },
+    }
+    common.save_json("BENCH_fleet", {"rows": rows, "summary": summary})
+    print(f"# fig14 sustained={sustained} "
+          f"monotonic={summary['monotonic_1_to_4']} "
+          f"chaos reroutes={chaos['reroutes']} "
+          f"all_admitted_completed="
+          f"{chaos_summary['all_admitted_completed']}", flush=True)
+
+
+def main(quick: bool = False):
+    repo = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count="
+                          f"{FORCED_DEVICES}").strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(repo / "src"), str(repo),
+         *filter(None, [env.get("PYTHONPATH")])])
+    cmd = [sys.executable, str(Path(__file__).resolve()), "--child"]
+    if quick:
+        cmd.append("--quick")
+    subprocess.run(cmd, env=env, cwd=str(repo), check=True)
+
+    data = json.loads(
+        (common.OUT_DIR / "BENCH_fleet.json").read_text())
+    for r in data["rows"]:
+        common.emit(
+            f"fig14/r{r['replicas']}@{r['qps_offered']:g}qps",
+            r["latency_ms"]["p95"] / 1e3,
+            f"rps={r['throughput_rps']};rej={r['rejected']};"
+            f"unresolved={r['unresolved']};spill={r['spillovers']};"
+            f"reroute={r['reroutes']}")
+    s = data["summary"]
+    c = s["chaos"]
+    common.emit("fig14/chaos", c["p95_ms"] / 1e3,
+                f"reroutes={c['reroutes']};unhealthy={c['unhealthy']};"
+                f"all_admitted_completed={c['all_admitted_completed']}")
+    assert s["monotonic_1_to_4"], \
+        f"sustained qps not monotonic in replica count: " \
+        f"{s['sustained_qps']}"
+    assert c["all_admitted_completed"], \
+        "chaos arm dropped admitted requests"
+    assert c["kill_observed"], "chaos arm never killed a replica"
+    assert c["reroutes"] > 0, \
+        "chaos arm completed without re-executing in-flight work"
+    return data["rows"]
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        child_main(quick="--quick" in sys.argv)
+    else:
+        main(quick="--quick" in sys.argv)

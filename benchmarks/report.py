@@ -115,8 +115,9 @@ def roofline_section():
 
 def bench_section():
     """Summaries of the experiments/bench JSON artifacts that carry an
-    acceptance-style summary block (fig11 online serving, fig13 cache)
-    — the serving-side counterpart of the dryrun/roofline tables."""
+    acceptance-style summary block (fig11 online serving, fig13 cache,
+    fig14 fleet) — the serving-side counterpart of the dryrun/roofline
+    tables."""
     lines = ["## §Bench — serving artifacts", ""]
     p = common.OUT_DIR / "BENCH_online.json"
     if p.exists():
@@ -138,6 +139,17 @@ def bench_section():
             f"(hit>=50%: {s.get('hit_rate_ge_50pct')}, "
             f"mean better: {s.get('mean_strictly_better')}, "
             f"p95 no worse: {s.get('interactive_p95_no_worse')})")
+    p = common.OUT_DIR / "BENCH_fleet.json"
+    if p.exists():
+        s = json.loads(p.read_text()).get("summary", {})
+        c = s.get("chaos", {})
+        lines.append(
+            f"- fig14 fleet sustained qps @ p95<="
+            f"{s.get('latency_budget_ms')}ms: {s.get('sustained_qps')} "
+            f"(monotonic 1->4: {s.get('monotonic_1_to_4')}); chaos "
+            f"kill-one-replica: reroutes={c.get('reroutes')}, "
+            f"all admitted completed: "
+            f"{c.get('all_admitted_completed')}")
     if len(lines) == 2:
         lines.append("- no BENCH_*.json artifacts yet "
                      "(run `python -m benchmarks.run`)")

@@ -33,6 +33,8 @@ MODULES = [
      "Fig 12: adaptive multi-tile escalation under attacks"),
     ("fig13_cache",
      "Fig 13: content cache + SLO admission under Zipf load"),
+    ("fig14_fleet",
+     "Fig 14: fleet scaling (sustained qps vs replicas) + chaos arm"),
     ("alloc_adaptivity", "§3: stream-allocation adaptivity"),
     ("kernel_fusion", "App B.1: preprocess kernel fusion"),
     ("roofline", "§Roofline: per-stage achieved vs roofline FLOPs"),

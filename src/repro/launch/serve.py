@@ -360,6 +360,81 @@ def run_online(cfg: DetectionConfig, params, *, qps: float,
     return report
 
 
+def run_fleet(cfg: DetectionConfig, params, *, replicas: int,
+              qps: float, duration_s: float, raw_size: int,
+              group: int = 1, max_batch: int = 16,
+              max_wait_ms: float = 10.0, max_queue: int = 256,
+              lanes: int = 0, seed: int = 0, pin_devices: bool = True,
+              fault_plans: Optional[dict] = None,
+              quiet: bool = False) -> dict:
+    """Build a :class:`~repro.serving.FleetRouter` over ``replicas``
+    :class:`~repro.serving.Replica` instances, warm them, drive the
+    fleet with Poisson arrivals THROUGH the router, drain, and report.
+
+    ``pin_devices`` assigns replica *i* to local jax device ``i % D``
+    — with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` this
+    is the CI-scale fleet simulation (one forced CPU device per
+    replica); on a single device it is a no-op.  Requests route by
+    content digest, so results are bit-identical to a single server at
+    any fleet size.
+
+    ``fault_plans`` maps replica name (``r0``..) to a
+    :class:`~repro.serving.FaultPlan` — the fig14 chaos arm
+    (kill-one-replica-mid-run) is this driver plus one plan entry, not
+    a separate code path."""
+    from repro.serving import BatcherConfig, FleetRouter, Replica
+    devices = jax.local_devices()
+    lane_map = (None if lanes == 0 else
+                {"ingest": 1, "decode": max(1, lanes),
+                 "rs": max(1, lanes)})
+    reps = [Replica(
+        f"r{i}", cfg, params,
+        batcher=BatcherConfig(max_batch=max_batch,
+                              max_wait_ms=max_wait_ms,
+                              max_queue=max_queue),
+        lanes=lane_map,
+        fault_plan=(fault_plans or {}).get(f"r{i}"),
+        device=(devices[i % len(devices)] if pin_devices else None))
+        for i in range(replicas)]
+    router = FleetRouter(reps)
+    router.warmup(data_lib.synth_image(0, raw_size))
+    router.start()
+    if not quiet:
+        print(f"fleet: {replicas} replicas over {len(devices)} "
+              f"device(s), warmed", flush=True)
+    router.metrics.reset()
+
+    def make_images(k: int) -> np.ndarray:
+        return np.stack([data_lib.synth_image(1000 + k * group + i,
+                                              raw_size)
+                         for i in range(group)])
+
+    load = open_loop_load(router, qps=qps, duration_s=duration_s,
+                          make_images=make_images, seed=seed)
+    drained = router.drain(timeout=120.0)
+    stats = router.stats()
+    unresolved = sum(not h.done() for h in load["handles"])
+    router.close()
+    lat = stats.get("request_latency_s", {})
+    return {
+        "replicas": replicas, "qps_offered": qps,
+        "duration_s": duration_s, "group": group,
+        "offered": load["offered"], "rejected": load["rejected"],
+        "completed": int(stats["counters"].get("requests_completed", 0)),
+        "failed": int(stats["counters"].get("requests_failed", 0)),
+        "unresolved": int(unresolved), "drained": bool(drained),
+        "throughput_rps": round(stats["throughput_rps"], 2),
+        "latency_ms": _lat_ms(lat),
+        "spillovers": stats["spillovers"],
+        "reroutes": stats["reroutes"],
+        "unhealthy": stats["unhealthy"],
+        "straggler_retries": stats["straggler_retries"],
+        "faults_injected": int(
+            stats["fleet_counters"].get("faults_injected", 0)),
+        "replica_table": stats["replicas"],
+    }
+
+
 def enable_compilation_cache(path: str, *, min_entry_bytes: int = 0,
                              min_compile_secs: float = 0.0) -> bool:
     """Point jax's persistent compilation cache at ``path`` so a service
@@ -431,6 +506,18 @@ def main():
                     help="request-level serving: DetectionServer + "
                          "open-loop Poisson load instead of the "
                          "offline batch-stream service")
+    ap.add_argument("--fleet", action="store_true",
+                    help="front --replicas DetectionServer replicas "
+                         "with the FleetRouter (rendezvous content "
+                         "routing, spill-over, crash re-execution) and "
+                         "drive Poisson load through the router; "
+                         "implies the online regime")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="fleet size for --fleet (replica i pins to "
+                         "local device i %% D — force a multi-device "
+                         "CPU with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N "
+                         "for CI-scale fleet simulation)")
     ap.add_argument("--qps", type=float, default=8.0,
                     help="offered load for --online (requests/s)")
     ap.add_argument("--duration", type=float, default=5.0,
@@ -524,6 +611,17 @@ def main():
                           cache_exact=args.cache_exact,
                           cache_embedding_threshold=(
                               args.cache_embed_threshold))
+    if args.fleet:
+        if args.replicas < 1:
+            raise SystemExit("--replicas must be >= 1")
+        rep = run_fleet(cfg, params, replicas=args.replicas,
+                        qps=args.qps, duration_s=args.duration,
+                        raw_size=args.img + 32, group=args.group,
+                        max_batch=args.max_batch,
+                        max_wait_ms=args.max_wait_ms,
+                        max_queue=args.max_queue, lanes=args.lanes)
+        print(json.dumps(rep, indent=1, default=str))
+        return
     if args.online:
         classes = None
         if args.classes:

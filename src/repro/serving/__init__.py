@@ -14,6 +14,12 @@ coalescing, and tail latency:
 * :mod:`repro.serving.server` — :class:`DetectionServer`: per-request
   futures over a persistent service-mode lane executor, straggler
   re-execution, live lane reallocation;
+* :mod:`repro.serving.replica` — :class:`Replica`: one server wrapped
+  for fleet membership (identity, optional device pin, health,
+  injectable :class:`FaultPlan` fault hooks);
+* :mod:`repro.serving.router` — :class:`FleetRouter`: rendezvous
+  content-digest routing over N replicas, spill-over on backpressure,
+  crash re-execution, rolling reconfigure;
 * :mod:`repro.serving.metrics` — queue depth / batch occupancy /
   latency percentiles / throughput / cache + admission registry.
 """
@@ -22,8 +28,11 @@ from repro.serving.batcher import (AdmissionError, BatcherConfig,
 from repro.serving.cache import (EmbeddingCache, InFlightTable,
                                  ResultCache)
 from repro.serving.metrics import MetricsRegistry
+from repro.serving.replica import FaultPlan, Replica, ReplicaCrashed
+from repro.serving.router import FleetRouter
 from repro.serving.server import DetectionServer
 
 __all__ = ["AdmissionError", "BatcherConfig", "MicroBatcher",
            "ResultCache", "EmbeddingCache", "InFlightTable",
-           "MetricsRegistry", "DetectionServer"]
+           "MetricsRegistry", "DetectionServer",
+           "Replica", "FaultPlan", "ReplicaCrashed", "FleetRouter"]

@@ -207,6 +207,17 @@ class MicroBatcher:
         with self._cv:
             return self._depth
 
+    def headroom(self, priority: Optional[str] = None) -> int:
+        """Images a non-blocking :meth:`submit` for this class could
+        admit right now (0 when closed or at the class's depth bound) —
+        the backpressure surface the fleet router's least-loaded
+        spill-over reads instead of probing with doomed submits."""
+        cls = self.resolve_class(priority)
+        with self._cv:
+            if self._closed:
+                return 0
+            return max(0, self._admit_bound(cls) - self._depth)
+
     def class_depths(self) -> Dict[str, int]:
         """Queued images per priority class (metrics view)."""
         with self._cv:

@@ -31,6 +31,18 @@ from typing import Deque, Dict, Optional
 _RESERVOIR = 8192
 
 
+def aggregate_counters(snapshots) -> Dict[str, float]:
+    """Sum the ``counters`` dicts of several :meth:`MetricsRegistry
+    .snapshot` outputs — the fleet-level rollup (per-replica counters
+    are exact and additive; latency distributions are NOT additive and
+    stay per-replica, the router observes its own fleet-wide ones)."""
+    out: Dict[str, float] = {}
+    for snap in snapshots:
+        for k, v in snap.get("counters", {}).items():
+            out[k] = out.get(k, 0.0) + v
+    return out
+
+
 def percentile(sorted_vals, q: float) -> float:
     """Nearest-rank percentile of an already-sorted list (q in [0,100])."""
     if not sorted_vals:

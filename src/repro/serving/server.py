@@ -67,12 +67,14 @@ through the metrics registry (``stats()``).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import queue
 import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -107,6 +109,8 @@ class RequestHandle:
         self._result: Optional[Dict[str, np.ndarray]] = None
         self._error: Optional[BaseException] = None
         self.t_done: Optional[float] = None
+        self._cb_lock = threading.Lock()
+        self._callbacks: List = []
 
     def done(self) -> bool:
         return self._ready.is_set()
@@ -120,15 +124,35 @@ class RequestHandle:
             raise self._error
         return self._result
 
+    def add_done_callback(self, fn):
+        """Register ``fn(handle)`` to run when the handle settles
+        (resolve or reject) — immediately if it already has.  Each
+        callback fires exactly once; exceptions it raises propagate to
+        the settling thread (callbacks are the fleet router's re-route
+        hook, so failures there must be loud, not swallowed)."""
+        with self._cb_lock:
+            if not self._ready.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
+    def _fire_callbacks(self):
+        with self._cb_lock:
+            cbs, self._callbacks = self._callbacks, []
+        for fn in cbs:
+            fn(self)
+
     def _resolve(self, result: Dict[str, np.ndarray]):
         self.t_done = time.perf_counter()
         self._result = result
         self._ready.set()
+        self._fire_callbacks()
 
     def _reject(self, err: BaseException):
         self.t_done = time.perf_counter()
         self._error = err
         self._ready.set()
+        self._fire_callbacks()
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -183,7 +207,15 @@ class DetectionServer:
                      sched_lib.StragglerPolicy] = None,
                  watchdog_interval_s: float = 0.05,
                  realloc_every: int = 0,
+                 device=None,
                  name: str = "detect-server"):
+        # optional device pin: every jit dispatch this server makes
+        # (key derivation, stage fns, warmup) runs under
+        # jax.default_device(device), so N in-process replicas spread
+        # over N forced CPU devices instead of piling onto device 0 —
+        # the CI-scale fleet simulation discipline of
+        # tests/sharded_check.py
+        self._device = device
         self.pipe = DetectionPipeline(cfg, extractor_params)
         self.registry = self.pipe.stages
         self.cfg = cfg
@@ -240,6 +272,12 @@ class DetectionServer:
         self._stage_s: Dict[str, float] = {}
         self._stage_b: float = 0.0
 
+    def _dev_ctx(self):
+        """Context manager pinning jit dispatch to this server's device
+        (no-op when unpinned — the single-server default)."""
+        return (jax.default_device(self._device)
+                if self._device is not None else contextlib.nullcontext())
+
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> "DetectionServer":
         # escalate_inline=False: the server escalates by re-submitting
@@ -274,9 +312,12 @@ class DetectionServer:
         escalation compile would otherwise land inside a live request's
         latency and trip the straggler watchdog.  Runs the registry fns
         directly, off the metrics path."""
-        import jax
         cfg = self.batcher.cfg
         reg = self.registry
+        with self._dev_ctx():
+            return self._warmup_body(cfg, reg, sample_image)
+
+    def _warmup_body(self, cfg, reg, sample_image: np.ndarray):
         sizes = []
         if cfg.bucket > 0:
             b = cfg.bucket
@@ -366,6 +407,59 @@ class DetectionServer:
             if t is not me:
                 t.join(timeout=2.0)
 
+    def kill(self, error: Optional[BaseException] = None):
+        """Abrupt shutdown — the crash-simulation path the fleet tier's
+        fault injection drives.  Unlike :meth:`close` nothing is
+        drained: admission stops, the executor is closed out from under
+        its in-flight tickets (each rejects THROUGH its callback, so
+        every admitted request's handle settles), and queued-but-never-
+        dispatched requests are rejected.  No handle is ever left
+        unresolved — the router's re-execution discipline depends on
+        rejection, not on timeouts."""
+        err = error if error is not None else RuntimeError(
+            f"{self.name}: killed")
+        self.batcher.close()
+        self._stop.set()
+        if self._ex is not None:
+            self._ex.close()   # in-flight tickets reject via _on_done
+        for e in self.batcher.flush():
+            self._finish_requests([e.slot], error=err)
+        while True:
+            try:
+                g = self._esc_q.get_nowait()
+            except queue.Empty:
+                break
+            self._fail_states(g.targets, err)
+        self.pipe.close()
+        me = threading.current_thread()
+        for t in self._threads:
+            if t is not me:
+                t.join(timeout=2.0)
+
+    def reconfigure(self, lanes: Dict[str, int]) -> Dict[str, int]:
+        """Apply an explicit lane map to the running executor (the
+        rolling-reconfigure path: the router drains this replica, calls
+        this, and returns it to rotation).  ``reallocate()`` is the
+        measured/Algorithm-1 variant; this one takes the map as given."""
+        if self._ex is None:
+            self._lanes = dict(lanes)
+            return dict(lanes)
+        applied = self._ex.reconfigure(dict(lanes))
+        self._lanes = dict(applied)
+        self.metrics.count("reconfigures")
+        return applied
+
+    def load(self) -> Dict[str, int]:
+        """Backpressure surface for the fleet router's least-loaded
+        spill-over and health polling: queued images, admitted-but-
+        unfinished requests, and the batcher's current admission
+        headroom (images the highest class could still admit)."""
+        with self._lock:
+            inflight = self._admitted - self._finished
+        return {"queue_depth": self.batcher.depth(),
+                "inflight_requests": int(inflight),
+                "headroom": self.batcher.headroom()}
+
     def _finish_requests(self, slots, *, error: BaseException):
         n = 0
         for slot in slots:
@@ -451,8 +545,11 @@ class DetectionServer:
         if key is None:
             key = self.registry.batch_key(rid)
         # per-REQUEST image keys: coalescing can't change them, which is
-        # what makes online results bit-identical to offline
-        keys = self.registry.image_keys(key, n) if n else None
+        # what makes online results bit-identical to offline (derived
+        # under the device pin so pinned replicas keep every buffer —
+        # keys included — colocated on their own device)
+        with self._dev_ctx():
+            keys = self.registry.image_keys(key, n) if n else None
         try:
             self.batcher.submit(images, keys, handle,
                                 priority=cls, block=block)
@@ -484,11 +581,12 @@ class DetectionServer:
             g = inf.esc
             # pow2-pad the escalation rows (bounded jit shapes); the
             # pad rows are inert — results sliced to len(targets)
-            raw, _ = _pad_pow2(g.raw)
-            keys, _ = _pad_pow2(g.keys)
-            acc, _ = _pad_pow2(g.acc)
-            return {"raw": raw, "keys": keys, "round": g.round,
-                    "acc_logits": jnp.asarray(acc)}
+            with self._dev_ctx():
+                raw, _ = _pad_pow2(g.raw)
+                keys, _ = _pad_pow2(g.keys)
+                acc, _ = _pad_pow2(g.acc)
+                return {"raw": raw, "keys": keys, "round": g.round,
+                        "acc_logits": jnp.asarray(acc)}
         return {"raw": inf.mb.raw, "keys": inf.mb.keys}
 
     def _dispatch(self, inf: _InFlight, *, retry: bool = False):
@@ -805,7 +903,8 @@ class DetectionServer:
     def _timed(self, name: str, fn):
         def timed_fn(p):
             t0 = time.perf_counter()
-            out = fn(p)
+            with self._dev_ctx():
+                out = fn(p)
             dt = time.perf_counter() - t0
             if p.get("round", 0) > 0:
                 # escalation rounds are tiny pow2 sub-batches: feeding

@@ -1,21 +1,44 @@
-"""Deadlock canary for service-mode executor/server tests.
+"""Deadlock canary for service-mode executor/server/fleet tests.
 
 ``@deadline(seconds)`` runs the test body in a worker thread and FAILS
 (instead of hanging the whole suite) if it does not finish in time —
-the failure mode of a queue/lock bug in the long-lived executor is a
-silent deadlock, which a plain test would turn into a CI timeout with
-no traceback.  (pytest-timeout is not in the container; this is the
-dependency-free equivalent, registered as the ``deadline`` marker in
-pytest.ini for bookkeeping.)
+the failure mode of a queue/lock bug in the long-lived executor, the
+DetectionServer, or the fleet router (spill-over loops, drain-during-
+reconfigure, crash-during-drain) is a silent deadlock, which a plain
+test would turn into a CI timeout with no traceback.  (pytest-timeout
+is not in the container; this is the dependency-free equivalent,
+registered as the ``deadline`` marker in pytest.ini for bookkeeping.)
+
+On timeout the canary dumps the stack of every live thread into the
+failure message — for the router paths the wedged frame (a blocking
+``submit`` on a dispatcher thread, a drain that can never complete)
+is the whole diagnosis, and without the dump a hang reproduced only
+in CI is undebuggable.
 
 Not named test_*.py on purpose — pytest must not collect it.
 """
 from __future__ import annotations
 
 import functools
+import sys
 import threading
+import traceback
 
 import pytest
+
+
+def _thread_dump() -> str:
+    """One formatted stack per live thread (the post-mortem a wedged
+    executor/router hang needs; daemon pump/watchdog threads included)."""
+    frames = sys._current_frames()
+    by_id = {t.ident: t for t in threading.enumerate()}
+    out = []
+    for tid, frame in frames.items():
+        t = by_id.get(tid)
+        name = t.name if t is not None else f"thread-{tid}"
+        stack = "".join(traceback.format_stack(frame))
+        out.append(f"--- {name} ---\n{stack}")
+    return "\n".join(out)
 
 
 def deadline(seconds: float):
@@ -36,7 +59,8 @@ def deadline(seconds: float):
             t.join(seconds)
             if t.is_alive():
                 pytest.fail(f"deadlock canary: {fn.__name__} still "
-                            f"running after {seconds}s")
+                            f"running after {seconds}s\n\nlive thread "
+                            f"stacks:\n{_thread_dump()}")
             if err:
                 raise err[0]
         return pytest.mark.deadline(wrapper)

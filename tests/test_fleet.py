@@ -1,0 +1,502 @@
+"""Fleet router tests: fault injection (replica crash mid-batch,
+induced admission spill-over, rolling reconfigure under load, close
+semantics), the fleet-vs-single-server bit-identity anchor, and the
+rendezvous-routing stability property.
+
+Every failure scenario is expressed as a :class:`FaultPlan` on the
+replica wrapper — data handed to the replica's public seams — never by
+monkeypatching server internals, so the tests exercise exactly the
+injection points the wrapper contracts to honor.
+
+Router-path deadlock canaries: the spill-over loop, drain-during-
+reconfigure, and crash-during-drain scenarios all wear the ``deadline``
+marker (tests/canary.py), so a wedged router fails fast with a thread
+dump instead of hanging CI.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from canary import deadline
+from repro.core.detect import DetectionConfig, DetectionPipeline
+from repro.core.extractor import init_extractor
+from repro.core.rs.codec import DEFAULT_CODE
+from repro.serving import (AdmissionError, BatcherConfig, DetectionServer,
+                           FaultPlan, FleetRouter, Replica, ReplicaCrashed)
+from repro.serving.router import rendezvous, rendezvous_order
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+_FIELDS = ("message_bits", "ok", "n_corrected", "logits")
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return init_extractor(jax.random.key(0),
+                          n_bits=DEFAULT_CODE.codeword_bits,
+                          channels=8, depth=2)
+
+
+def _cfg(**kw):
+    base = dict(tile=16, img_size=32, resize_src=40, mode="qrmark",
+                rs_mode="device")
+    base.update(kw)
+    return DetectionConfig(**base)
+
+
+def _replica(name, params, *, cfg=None, plan=None, max_wait_ms=2.0,
+             max_batch=4, max_queue=256):
+    return Replica(name, cfg or _cfg(), params,
+                   batcher=BatcherConfig(max_batch=max_batch,
+                                         max_wait_ms=max_wait_ms,
+                                         max_queue=max_queue),
+                   fault_plan=plan)
+
+
+def _reqs(n, seed, max_group=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 256, (int(rng.integers(1, max_group + 1)),
+                                  64, 64, 3), dtype=np.uint8)
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# rendezvous routing: stability property
+# ---------------------------------------------------------------------------
+
+
+def _digests(rng, n):
+    return [rng.bytes(32) for _ in range(n)]
+
+
+def _check_rendezvous_stability(digests, names):
+    """The property the fleet leans on: deterministic mapping, and
+    add/remove of one replica remaps at most ~1/N of the keyspace."""
+    base = {d: rendezvous(d, names) for d in digests}
+    # determinism: same digests, same (shuffled) name list -> same owner
+    shuffled = list(reversed(names))
+    for d in digests:
+        assert rendezvous(d, shuffled) == base[d]
+    # removal: ONLY digests owned by the removed replica remap (exact
+    # HRW property, not just a fraction bound)
+    removed = names[0]
+    survivors = [n for n in names if n != removed]
+    for d in digests:
+        if base[d] != removed:
+            assert rendezvous(d, survivors) == base[d], \
+                "removing one replica remapped a digest it did not own"
+    # addition: the new replica steals ~1/(N+1); nothing else moves
+    grown = names + ["new-replica"]
+    moved = 0
+    for d in digests:
+        owner = rendezvous(d, grown)
+        if owner != base[d]:
+            assert owner == "new-replica", \
+                "adding a replica remapped a digest to an OLD replica"
+            moved += 1
+    # expected |digests|/(N+1); assert a generous 3x bound so the test
+    # checks the mechanism, not hash luck
+    bound = max(4, 3 * len(digests) // (len(names) + 1))
+    assert moved <= bound, f"adding one replica moved {moved} digests"
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           n_replicas=st.integers(2, 8),
+           n_digests=st.integers(8, 64))
+    def test_rendezvous_stability_property(seed, n_replicas, n_digests):
+        rng = np.random.default_rng(seed)
+        names = [f"r{i}" for i in range(n_replicas)]
+        _check_rendezvous_stability(_digests(rng, n_digests), names)
+else:                                                  # pragma: no cover
+    def test_rendezvous_stability_property():
+        for seed in range(10):
+            rng = np.random.default_rng(seed)
+            names = [f"r{i}" for i in range(2 + seed % 7)]
+            _check_rendezvous_stability(
+                _digests(rng, 8 + 8 * (seed % 5)), names)
+
+
+def test_rendezvous_order_is_a_permutation():
+    names = [f"r{i}" for i in range(5)]
+    order = rendezvous_order(b"digest", names)
+    assert sorted(order) == sorted(names)
+    with pytest.raises(ValueError):
+        rendezvous(b"digest", [])
+
+
+# ---------------------------------------------------------------------------
+# fleet == single server, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@deadline(600)
+def test_fleet_bit_identity_across_replica_counts(tiny_params):
+    """The same request set — explicit-key AND content-key/cache_exact
+    traffic (with repeats, so the cache tier actually fires) — routed
+    through 1, 2, and 4 replicas is bitwise identical to a single
+    DetectionServer: keys derive from content or the caller, never
+    from placement."""
+    cfg = _cfg(cache_exact=True)
+    reqs = _reqs(6, seed=7)
+    reqs.append(reqs[0].copy())          # exact repeat: cache/dedup path
+    keys = [jax.random.key(100 + i) if i % 2 else None
+            for i in range(len(reqs))]   # mixed explicit / content-key
+
+    def run(server_like):
+        handles = [server_like.submit(r, key=k)
+                   for r, k in zip(reqs, keys)]
+        return [h.result(300) for h in handles]
+
+    ref_srv = DetectionServer(
+        cfg, tiny_params,
+        batcher=BatcherConfig(max_batch=4, max_wait_ms=2.0)).start()
+    try:
+        ref = run(ref_srv)
+    finally:
+        ref_srv.close()
+
+    for n in (1, 2, 4):
+        router = FleetRouter(
+            [_replica(f"r{i}", tiny_params, cfg=cfg)
+             for i in range(n)]).start()
+        try:
+            got = run(router)
+        finally:
+            router.close()
+        for i, (a, b) in enumerate(zip(ref, got)):
+            for f in _FIELDS:
+                np.testing.assert_array_equal(
+                    a[f], b[f],
+                    err_msg=f"{n} replicas, request {i}, field {f}: "
+                            f"fleet != single server")
+
+
+@deadline(300)
+def test_fleet_cache_exact_traffic_hits_one_replicas_cache(tiny_params):
+    """Content-digest routing sends identical pixels to the same
+    replica, so the second submission of the same image is an exact
+    cache hit somewhere in the fleet (routing to a different replica
+    would silently zero the hit rate)."""
+    cfg = _cfg(cache_exact=True)
+    router = FleetRouter(
+        [_replica(f"r{i}", tiny_params, cfg=cfg) for i in range(3)]
+    ).start()
+    img = np.random.default_rng(3).integers(
+        0, 256, (1, 64, 64, 3), dtype=np.uint8)
+    try:
+        a = router.submit(img).result(120)
+        assert router.drain(60)
+        b = router.submit(img).result(120)
+        stats = router.stats()
+    finally:
+        router.close()
+    assert stats["fleet_counters"].get("cache_hit_exact", 0) >= 1, \
+        "repeat of identical pixels missed the fleet's exact cache"
+    for f in _FIELDS:
+        np.testing.assert_array_equal(a[f], b[f])
+
+
+# ---------------------------------------------------------------------------
+# fault injection: crash mid-batch, spill-over, rolling reconfigure, close
+# ---------------------------------------------------------------------------
+
+
+@deadline(300)
+def test_crash_mid_batch_resolves_via_sibling(tiny_params):
+    """A replica that dies with admitted-but-unresolved requests: every
+    handle it held must resolve via re-execution on a sibling
+    (first-completion-wins), bitwise equal to the offline engine."""
+    # long max_wait on the doomed replica so its first admitted request
+    # is still queued (mid-batch) when the crash lands
+    reps = [_replica("doomed", tiny_params,
+                     plan=FaultPlan(crash_after_admit=0),
+                     max_wait_ms=100.0),
+            _replica("healthy", tiny_params)]
+    router = FleetRouter(reps).start()
+    reqs = _reqs(8, seed=11)
+    keys = [jax.random.key(i) for i in range(len(reqs))]
+    try:
+        handles, results = [], []
+        for r, k in zip(reqs, keys):
+            handles.append(router.submit(r, key=k))
+        results = [h.result(120) for h in handles]
+        stats = router.stats()
+    finally:
+        router.close()
+    assert stats["reroutes"] >= 1, "no request was re-executed"
+    assert stats["unhealthy"] == 1
+    assert stats["counters"].get("requests_failed", 0) == 0
+    assert any(h.reroutes for h in handles)
+    rerouted = [h for h in handles if h.reroutes]
+    assert all(h.replica == "healthy" for h in rerouted)
+    pipe = DetectionPipeline(_cfg(), tiny_params)
+    for r, k, res in zip(reqs, keys, results):
+        ref = pipe.detect_batch(r, key=k)
+        for f in _FIELDS:
+            np.testing.assert_array_equal(ref[f], res[f])
+
+
+@deadline(300)
+def test_spillover_on_induced_admission_error(tiny_params):
+    """Induced AdmissionError on the rendezvous owner: the router must
+    place the request on the least-loaded healthy sibling, count the
+    spill-over, and results must not change."""
+    reps = [_replica("full", tiny_params,
+                     plan=FaultPlan(reject_submits=1000)),
+            _replica("sib-a", tiny_params),
+            _replica("sib-b", tiny_params)]
+    router = FleetRouter(reps).start()
+    reqs = _reqs(9, seed=13)
+    keys = [jax.random.key(40 + i) for i in range(len(reqs))]
+    try:
+        handles = [router.submit(r, key=k) for r, k in zip(reqs, keys)]
+        results = [h.result(120) for h in handles]
+        stats = router.stats()
+    finally:
+        router.close()
+    assert stats["spillovers"] >= 1, "owner rejected but nothing spilled"
+    assert stats["counters"].get("requests_failed", 0) == 0
+    spilled = [h for h in handles if h.spilled]
+    assert spilled and all(h.replica != "full" for h in spilled)
+    pipe = DetectionPipeline(_cfg(), tiny_params)
+    for r, k, res in zip(reqs, keys, results):
+        ref = pipe.detect_batch(r, key=k)
+        for f in _FIELDS:
+            np.testing.assert_array_equal(ref[f], res[f])
+
+
+@deadline(600)
+def test_rolling_reconfigure_under_load_zero_drops(tiny_params):
+    """Drain-one / reconfigure / return-to-rotation across the fleet
+    while a submitter thread keeps offering traffic: every admitted
+    request resolves (zero dropped, zero unresolved), and the new lane
+    map is applied to every healthy replica."""
+    router = FleetRouter(
+        [_replica(f"r{i}", tiny_params) for i in range(3)])
+    rng = np.random.default_rng(17)
+    # compile before offering load: the roll must be measured against
+    # steady-state replicas, not first-request jit stalls that back the
+    # queues up to their admission bound
+    router.warmup(rng.integers(0, 256, (64, 64, 3), dtype=np.uint8))
+    router.start()
+    handles, submit_err = [], []
+    stop = threading.Event()
+
+    def pump():
+        k = 0
+        while not stop.is_set():
+            img = rng.integers(0, 256, (1, 64, 64, 3), dtype=np.uint8)
+            try:
+                handles.append(router.submit(img,
+                                             key=jax.random.key(k)))
+            except AdmissionError as e:   # zero-drop means NO rejects
+                submit_err.append(e)
+            k += 1
+            time.sleep(0.02)
+
+    t = threading.Thread(target=pump, daemon=True)
+    t.start()
+    try:
+        time.sleep(0.15)                 # traffic flowing
+        applied = router.rolling_reconfigure(
+            {"ingest": 1, "decode": 2, "rs": 1}, drain_timeout=60.0)
+        time.sleep(0.15)                 # traffic after the roll
+    finally:
+        stop.set()
+        t.join(10.0)
+    try:
+        assert len(applied) == 3
+        assert all(v == {"ingest": 1, "decode": 2, "rs": 1}
+                   for v in applied.values())
+        assert not submit_err, f"requests dropped during the roll: " \
+                               f"{submit_err[0]}"
+        results = [h.result(120) for h in handles]
+        assert len(results) == len(handles)
+        stats = router.stats()
+        assert stats["counters"].get("requests_failed", 0) == 0
+        assert stats["unhealthy"] == 0
+    finally:
+        router.close()
+
+
+@deadline(300)
+def test_router_close_rejects_pending_exactly_once(tiny_params):
+    """Non-graceful close with requests still queued: every pending
+    handle is rejected — and its done-callback fires exactly once (no
+    double settlement through the replica-kill and router-sweep
+    paths)."""
+    # huge max_wait + max_batch: submissions sit in the batcher queue,
+    # guaranteed pending at close
+    reps = [_replica(f"r{i}", tiny_params, max_wait_ms=60_000.0,
+                     max_batch=32) for i in range(2)]
+    router = FleetRouter(reps).start()
+    reqs = _reqs(6, seed=23, max_group=2)
+    handles = [router.submit(r, key=jax.random.key(i))
+               for i, r in enumerate(reqs)]
+    fired = {h.rid: 0 for h in handles}
+    for h in handles:
+        h.add_done_callback(lambda hh: fired.__setitem__(
+            hh.rid, fired[hh.rid] + 1))
+    router.close(graceful=False)
+    for h in handles:
+        assert h.done(), "close() left a fleet handle unresolved"
+        with pytest.raises(RuntimeError):
+            h.result(0)
+    assert all(v == 1 for v in fired.values()), \
+        f"settlement not exactly-once: {fired}"
+    # a closed router refuses new work loudly
+    with pytest.raises(AdmissionError, match="closed"):
+        router.submit(reqs[0])
+    # idempotent close
+    router.close()
+
+
+# ---------------------------------------------------------------------------
+# router-path deadlock canaries
+# ---------------------------------------------------------------------------
+
+
+@deadline(120)
+def test_spillover_loop_terminates_when_all_reject(tiny_params):
+    """Whole-fleet backpressure: every replica induces AdmissionError.
+    The spill-over pass must visit each candidate once and surface
+    AdmissionError to the caller — not loop forever."""
+    reps = [_replica(f"r{i}", tiny_params,
+                     plan=FaultPlan(reject_submits=1000))
+            for i in range(3)]
+    router = FleetRouter(reps).start()
+    img = np.zeros((1, 64, 64, 3), np.uint8)
+    try:
+        with pytest.raises(AdmissionError, match="no healthy replica"):
+            router.submit(img, key=jax.random.key(0))
+        assert router.stats()["counters"].get("requests_rejected") == 1
+        # fleet drains trivially — nothing was admitted
+        assert router.drain(5)
+    finally:
+        router.close()
+
+
+@deadline(300)
+def test_drain_during_reconfigure_no_deadlock(tiny_params):
+    """drain() concurrent with rolling_reconfigure(): both must
+    complete — the roll's out-of-rotation window must not strand a
+    request where drain can never see it settle."""
+    router = FleetRouter(
+        [_replica(f"r{i}", tiny_params) for i in range(2)]).start()
+    reqs = _reqs(6, seed=29, max_group=2)
+    done = {}
+    try:
+        handles = [router.submit(r, key=jax.random.key(i))
+                   for i, r in enumerate(reqs)]
+
+        def roll():
+            done["applied"] = router.rolling_reconfigure(
+                drain_timeout=60.0)
+
+        t = threading.Thread(target=roll, daemon=True)
+        t.start()
+        assert router.drain(timeout=120.0), "drain wedged during roll"
+        t.join(120.0)
+        assert not t.is_alive(), "rolling_reconfigure wedged"
+        assert len(done["applied"]) == 2
+        [h.result(60) for h in handles]
+    finally:
+        router.close()
+
+
+@deadline(300)
+def test_crash_during_drain_does_not_wedge_roll(tiny_params):
+    """A replica that crashes while being drained for reconfigure: the
+    roll marks it unhealthy and moves on; its in-flight work re-executes
+    on siblings; subsequent traffic still completes."""
+    reps = [_replica("fragile", tiny_params,
+                     plan=FaultPlan(crash_on_drain=True),
+                     max_wait_ms=100.0),
+            _replica("steady", tiny_params)]
+    router = FleetRouter(reps).start()
+    reqs = _reqs(6, seed=31, max_group=2)
+    keys = [jax.random.key(60 + i) for i in range(len(reqs))]
+    try:
+        handles = [router.submit(r, key=k) for r, k in zip(reqs, keys)]
+        applied = router.rolling_reconfigure(drain_timeout=60.0)
+        # the fragile replica died mid-roll: only the survivor applied
+        assert list(applied) == ["steady"]
+        stats = router.stats()
+        assert stats["unhealthy"] == 1
+        assert not router._replicas["fragile"].healthy
+        # every pre-roll request still resolves (sibling re-execution
+        # for anything the crash took down)
+        results = [h.result(120) for h in handles]
+        # traffic after the roll lands on the survivor
+        post = router.submit(reqs[0], key=keys[0])
+        assert post.result(120) is not None
+        assert post.replica == "steady"
+    finally:
+        router.close()
+    pipe = DetectionPipeline(_cfg(), tiny_params)
+    for r, k, res in zip(reqs, keys, results):
+        ref = pipe.detect_batch(r, key=k)
+        for f in _FIELDS:
+            np.testing.assert_array_equal(ref[f], res[f])
+
+
+# ---------------------------------------------------------------------------
+# replica wrapper seams
+# ---------------------------------------------------------------------------
+
+
+@deadline(120)
+def test_replica_fault_plan_seams(tiny_params):
+    """The FaultPlan injection points are the wrapper's public
+    contract: induced rejections decrement, crash flips healthy exactly
+    once, and a dead replica refuses work with ReplicaCrashed."""
+    rep = _replica("r0", tiny_params,
+                   plan=FaultPlan(reject_submits=2)).start()
+    img = np.zeros((1, 64, 64, 3), np.uint8)
+    try:
+        for _ in range(2):
+            with pytest.raises(AdmissionError, match="induced"):
+                rep.submit(img, key=jax.random.key(0))
+        h = rep.submit(img, key=jax.random.key(0))
+        assert h.result(60) is not None
+        assert rep.healthy
+        rep.crash("test")
+        assert not rep.healthy
+        rep.crash("second crash is a no-op")
+        with pytest.raises(ReplicaCrashed):
+            rep.submit(img, key=jax.random.key(0))
+        load = rep.load()
+        assert load["headroom"] == 0 and load["queue_depth"] >= 1 << 30
+        assert rep.drain(0.1) is False
+        with pytest.raises(ReplicaCrashed):
+            rep.reconfigure({"ingest": 1, "decode": 1, "rs": 1})
+    finally:
+        rep.close()     # no-op after crash, must not raise
+
+
+@deadline(120)
+def test_server_kill_rejects_inflight_and_queued(tiny_params):
+    """DetectionServer.kill (the crash primitive): no drain, every
+    admitted handle settles with the supplied error."""
+    srv = DetectionServer(
+        _cfg(), tiny_params,
+        batcher=BatcherConfig(max_batch=32,
+                              max_wait_ms=60_000.0)).start()
+    rng = np.random.default_rng(37)
+    handles = [srv.submit(rng.integers(0, 256, (1, 64, 64, 3),
+                                       dtype=np.uint8),
+                          key=jax.random.key(i)) for i in range(4)]
+    srv.kill(ReplicaCrashed("test kill"))
+    for h in handles:
+        assert h.done(), "kill() left a handle unresolved"
+        with pytest.raises(RuntimeError):
+            h.result(0)
